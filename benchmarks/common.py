@@ -1,0 +1,37 @@
+"""Shared benchmark plumbing: CSV emission + the paper's default setup."""
+
+from __future__ import annotations
+
+import csv
+import os
+import sys
+import time
+
+from repro.chip.config import TB, ChipConfig, ipu_pod4_hbm
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                       "bench")
+DESIGNS = ("Basic", "Static", "ELK-Dyn", "ELK-Full", "Ideal")
+PAPER_MODELS = ("llama2_13b", "gemma2_27b", "opt_30b", "llama2_70b")
+
+
+def emit(name: str, rows: list[dict]) -> str:
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, f"{name}.csv")
+    if rows:
+        fields: list[str] = []
+        for r in rows:
+            for k in r:
+                if k not in fields:
+                    fields.append(k)
+        with open(path, "w", newline="") as f:
+            w = csv.DictWriter(f, fieldnames=fields, restval="")
+            w.writeheader()
+            w.writerows(rows)
+    for r in rows:
+        print(",".join(f"{k}={v}" for k, v in r.items()))
+    return path
+
+
+def default_chip(**kw) -> ChipConfig:
+    return ipu_pod4_hbm(**kw)

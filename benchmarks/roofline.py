@@ -1,0 +1,102 @@
+"""§Roofline report: aggregate the dry-run JSONs into the per-(arch x
+shape x mesh) three-term table (compute / memory / collective seconds,
+dominant term, MODEL_FLOPS/HLO ratio, roofline fraction).
+
+Reads experiments/dryrun/*.json produced by ``repro.launch.dryrun``; the
+accounting records (``__acct``) carry the scan-corrected terms and are
+preferred, falling back to the production record.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import OUT_DIR, emit
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def load_records() -> dict:
+    recs = {}
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        key = (r["arch"], r["shape"], r["mesh"],
+               "acct" if r.get("kind") == "accounting" else "prod")
+        recs[key] = r
+    return recs
+
+
+def roofline_table() -> list[dict]:
+    recs = load_records()
+    rows = []
+    archs = sorted({k[0] for k in recs})
+    shapes = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+    for arch in archs:
+        for shape in shapes:
+            prod = recs.get((arch, shape, "single", "prod"))
+            acct = recs.get((arch, shape, "single", "acct"))
+            if prod is None:
+                continue
+            if prod.get("status") == "skipped":
+                rows.append({"arch": arch, "shape": shape,
+                             "status": "skipped",
+                             "note": prod["reason"][:60]})
+                continue
+            row = {"arch": arch, "shape": shape, "status": prod["status"]}
+            if prod.get("status") == "ok":
+                mem = prod.get("memory", {})
+                row["hbm_gib_per_dev"] = round(
+                    mem.get("total_hbm_bytes", 0) / 2 ** 30, 2)
+                row["fits_16gb"] = prod.get("fits_16gb")
+                row["compile_s"] = prod.get("compile_s")
+            src = None
+            if acct and acct.get("status") == "ok":
+                src = acct.get("roofline_flash") or acct["roofline"]
+                row["terms_from"] = "accounting"
+            elif prod.get("status") == "ok":
+                src = prod["roofline"]
+                row["terms_from"] = "production(scan-undercounted)"
+            if src:
+                row.update(
+                    compute_s=round(src["compute_s"], 4),
+                    memory_s=round(src["memory_s"], 4),
+                    collective_s=round(src["collective_s"], 4),
+                    dominant=src["dominant"],
+                    bound_ms=round(src["bound_s"] * 1e3, 2),
+                    useful_flops=round(src["useful_flops_ratio"], 3),
+                    roofline_frac=round(src["roofline_fraction"], 4),
+                )
+            rows.append(row)
+    emit("roofline_table", rows)
+    return rows
+
+
+def multi_pod_table() -> list[dict]:
+    """Multi-pod compile proof: every cell's 2x16x16 record."""
+    recs = load_records()
+    rows = []
+    for (arch, shape, mesh, kind), r in sorted(recs.items()):
+        if mesh != "multi" or kind != "prod":
+            continue
+        row = {"arch": arch, "shape": shape, "status": r["status"]}
+        if r["status"] == "ok":
+            row["hbm_gib_per_dev"] = round(
+                r["memory"].get("total_hbm_bytes", 0) / 2 ** 30, 2)
+            row["compile_s"] = r.get("compile_s")
+            row["collectives"] = "+".join(
+                f"{k}:{v}" for k, v in sorted(
+                    r["collectives"]["counts"].items()))
+        elif r["status"] == "skipped":
+            row["note"] = r["reason"][:50]
+        rows.append(row)
+    emit("multipod_table", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    roofline_table()
+    multi_pod_table()

@@ -1,0 +1,48 @@
+"""Benchmark driver: one section per paper table/figure + the roofline
+report.  ``python -m benchmarks.run [--quick]``."""
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    quick = "--quick" in sys.argv
+    t0 = time.time()
+    from benchmarks import paper_figs, roofline, validate_paper
+
+    sections = [
+        ("fig12_costmodel", paper_figs.fig12_costmodel),
+        ("fig16_compile_time", paper_figs.fig16_compile_time),
+        ("fig17_latency", paper_figs.fig17_latency),
+        ("fig18_breakdown", paper_figs.fig18_breakdown),
+        ("fig19_hbm_sweep", paper_figs.fig19_20_hbm_sweep),
+        ("fig21_topology", paper_figs.fig21_topology),
+        ("fig22_noc_sweep", paper_figs.fig22_noc_sweep),
+        ("fig23_cores", paper_figs.fig23_cores),
+        ("fig24_training", paper_figs.fig24_training),
+        ("simulator_validation", paper_figs.simulator_validation),
+        ("validate_paper", validate_paper.validate),
+        ("roofline_table", roofline.roofline_table),
+        ("multipod_table", roofline.multi_pod_table),
+    ]
+    if quick:
+        keep = {"fig12_costmodel", "fig18_breakdown", "validate_paper",
+                "roofline_table"}
+        sections = [s for s in sections if s[0] in keep]
+
+    for name, fn in sections:
+        print(f"\n===== {name} =====")
+        t = time.time()
+        try:
+            fn()
+        except Exception as e:  # noqa: BLE001
+            print(f"[ERROR] {name}: {type(e).__name__}: {e}")
+        print(f"----- {name} done in {time.time() - t:.1f}s")
+    print(f"\nall benchmarks finished in {time.time() - t0:.1f}s; "
+          f"CSVs in experiments/bench/")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Validation against the paper's own claims (§6.2/§6.3).
+
+Checked (tolerances documented in EXPERIMENTS.md §Validation):
+  * design ordering Basic <= Static <= ELK-Dyn <= ELK-Full <= Ideal,
+  * ELK-Full >= 90% of Ideal (paper: 94.84% mean),
+  * HBM-utilization ordering Basic < ELK-Full <= Ideal-neighborhood,
+  * mean preload-reorder edit distance is small (paper: 2.9 steps).
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import default_chip, emit
+from repro.configs import get_config
+from repro.core.elk import compare_designs
+
+
+def validate(models=("llama2_13b", "opt_30b"), batch=32, seq=2048
+             ) -> list[dict]:
+    rows = []
+    ok_all = True
+    chip = default_chip()
+    for model in models:
+        plans = compare_designs(get_config(model), chip, batch=batch,
+                                seq=seq, phase="decode")
+        t = {d: p.total_time for d, p in plans.items()}
+        checks = {
+            "ordering": t["Basic"] >= t["Static"] * 0.999
+            and t["Static"] >= t["ELK-Dyn"] * 0.999
+            and t["ELK-Dyn"] >= t["ELK-Full"] * 0.999
+            and t["ELK-Full"] >= t["Ideal"] * 0.999,
+            "full_vs_ideal_90pct": t["Ideal"] / t["ELK-Full"] >= 0.90,
+            "hbm_util_ordering": plans["Basic"].util.hbm
+            <= plans["ELK-Full"].util.hbm + 1e-6,
+            "edit_distance_small":
+                plans["ELK-Full"].edit_distance() <= 6.0,
+        }
+        ok_all &= all(checks.values())
+        rows.append({"model": model,
+                     "full_vs_ideal": round(t["Ideal"] / t["ELK-Full"], 4),
+                     "basic_slowdown": round(t["Basic"] / t["ELK-Full"], 3),
+                     "static_slowdown": round(t["Static"] / t["ELK-Full"],
+                                              3),
+                     **{k: str(v) for k, v in checks.items()}})
+    emit("validate_paper", rows)
+    if not ok_all:
+        raise SystemExit("paper-claim validation FAILED")
+    return rows
+
+
+if __name__ == "__main__":
+    validate()

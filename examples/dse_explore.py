@@ -1,0 +1,40 @@
+"""Design-space exploration with the ICCA simulator toolkit (paper §6.4):
+sweep HBM bandwidth, NoC bandwidth and topology, reproduce the paper's
+insight that the two bandwidths must scale together.
+
+    PYTHONPATH=src python examples/dse_explore.py
+"""
+
+from repro.chip.config import TB, ipu_pod4_hbm
+from repro.configs import get_config
+from repro.core.elk import compile_model
+
+cfg = get_config("llama2_13b")
+
+print("HBM bandwidth sweep (ELK-Full per-token latency, ms):")
+for bw in (2, 4, 8, 16, 32):
+    chip = ipu_pod4_hbm(hbm_bw=bw * TB)
+    p = compile_model(cfg, chip, batch=32, seq=2048, phase="decode",
+                      design="ELK-Full", max_orders=4)
+    print(f"  hbm={bw:2d} TB/s -> {p.total_time*1e3:7.3f} ms  "
+          f"(hbm util {p.util.hbm:5.1%})")
+
+print("\nNoC x HBM joint sweep (the 'scale together' insight):")
+base = ipu_pod4_hbm()
+for noc_scale in (0.5, 1.0, 2.0):
+    row = f"  noc x{noc_scale:3.1f}: "
+    for bw in (8, 16, 32):
+        chip = base.scaled(link_bw=base.link_bw * noc_scale,
+                           hbm_bw=bw * TB)
+        p = compile_model(cfg, chip, batch=32, seq=2048, phase="decode",
+                          design="ELK-Full", max_orders=4)
+        row += f"hbm{bw:2d}TB={p.total_time*1e3:7.3f}ms  "
+    print(row)
+
+print("\ntopology comparison:")
+for topo in ("all2all", "mesh2d"):
+    chip = ipu_pod4_hbm(topology=topo)
+    p = compile_model(cfg, chip, batch=32, seq=2048, phase="decode",
+                      design="ELK-Full", max_orders=4)
+    print(f"  {topo:8s}: {p.total_time*1e3:7.3f} ms "
+          f"(noc util {p.util.interconnect:5.1%})")

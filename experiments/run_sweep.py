@@ -1,0 +1,22 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import sys
+from repro.configs import ARCH_IDS
+from repro.launch.dryrun import run_cell, run_cell_accounting
+from repro.launch.specs import SHAPES
+
+which = sys.argv[1] if len(sys.argv) > 1 else "all"
+for arch in ARCH_IDS:
+    for shape in SHAPES:
+        if which in ("all", "prod"):
+            for mesh in ("single", "multi"):
+                try:
+                    run_cell(arch, shape, mesh)
+                except Exception as e:
+                    print(f"[FATAL] {arch} {shape} {mesh}: {e}", flush=True)
+        if which in ("all", "acct"):
+            try:
+                run_cell_accounting(arch, shape, "single")
+            except Exception as e:
+                print(f"[FATAL acct] {arch} {shape}: {e}", flush=True)
+print("SWEEP DONE", flush=True)

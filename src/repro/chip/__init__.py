@@ -1,0 +1,1 @@
+from repro.chip.config import ChipConfig, ipu_mk2, ipu_pod4_hbm, tpu_v5e_pod, tpu_v5e_vmem  # noqa: F401

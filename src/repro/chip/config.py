@@ -1,0 +1,203 @@
+"""ICCA chip hardware descriptions (paper §2.1, §6.1).
+
+A ``ChipConfig`` is the hardware vocabulary shared by the ELK compiler core,
+the event-driven simulator, and the TPU integration layer.  All bandwidths are
+bytes/s, capacities bytes, compute FLOP/s.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+Topology = Literal["all2all", "mesh2d"]
+
+KB = 1024
+MB = 1024 * KB
+GB = 1024 * MB
+TB = 1024 * GB
+
+
+@dataclasses.dataclass(frozen=True)
+class ChipConfig:
+    """One ICCA chip (or a multi-chip pod treated as one flat core pool)."""
+
+    name: str
+    num_cores: int
+    sram_per_core: int                 # bytes of local scratchpad per core
+    core_flops: float                  # peak FLOP/s of one core (matmul)
+    core_flops_vector: float           # peak FLOP/s of one core (non-matmul)
+    sram_bw_per_core: float            # local SRAM read bandwidth per core
+    link_bw: float                     # one inter-core link (per direction)
+    topology: Topology = "all2all"
+    num_chips: int = 1                 # multi-chip pod: NoC topology is per-chip
+    mesh_dims: tuple[int, int] = (0, 0)    # per-chip mesh; (0,0) -> near-square
+    hbm_bw: float = 0.0                # aggregate off-chip bandwidth
+    hbm_controllers: int = 4
+    hbm_latency: float = 1e-6          # per-request latency (s)
+    link_latency: float = 5e-7         # per-hop latency (s)
+    # Per-core reserved bytes (paper §5: 8KB inter-core receive buffer).
+    reserved_per_core: int = 8 * KB
+    # IPU-style SRAM port contention: remote reads block local compute (§2.3 ③,
+    # footnote 2).  False for chips whose local memory is dual-ported.
+    sram_port_blocking: bool = True
+
+    # ---- derived -----------------------------------------------------------
+    @property
+    def total_sram(self) -> int:
+        return self.num_cores * (self.sram_per_core - self.reserved_per_core)
+
+    @property
+    def usable_sram_per_core(self) -> int:
+        return self.sram_per_core - self.reserved_per_core
+
+    @property
+    def total_flops(self) -> float:
+        return self.num_cores * self.core_flops
+
+    @property
+    def interconnect_bw(self) -> float:
+        """Aggregate all-to-all interconnect bandwidth (paper: 1472*5.5GB/s)."""
+        return self.num_cores * self.link_bw
+
+    @property
+    def cores_per_chip(self) -> int:
+        return self.num_cores // max(self.num_chips, 1)
+
+    @property
+    def mesh_shape(self) -> tuple[int, int]:
+        """Per-chip mesh grid (paper §6.1 simulates 4 chips, each its own NoC)."""
+        if self.topology != "mesh2d":
+            raise ValueError("mesh_shape on non-mesh chip")
+        if self.mesh_dims != (0, 0):
+            return self.mesh_dims
+        # near-square factorization of the per-chip core count
+        n = self.cores_per_chip
+        r = int(n ** 0.5)
+        while n % r:
+            r -= 1
+        return (r, n // r)
+
+    # ---- NoC traffic model (paper §5 mapping strategies) --------------------
+    # all2all: each core drives one 5.5GB/s link at a time => capacity N*link,
+    #   every transfer is 1 "hop".
+    # mesh2d: each core talks to up to 4 neighbors simultaneously (paper §6.1)
+    #   => capacity 4*N*link, but a transfer consumes one link per hop.
+    #   Dimension-order routing maps partition dims to mesh dims, so
+    #   compute-shift rotations / ring reductions are neighbor hops (1);
+    #   the data-distribution phase fetches within a group mapped to a mesh
+    #   dim (~2 hops); HBM controllers sit on the grid edges, so preload
+    #   traffic crosses (rows+cols)/4 links on average.
+    @property
+    def noc_capacity(self) -> float:
+        if self.topology == "all2all":
+            return self.num_cores * self.link_bw
+        return 4 * self.num_cores * self.link_bw
+
+    @property
+    def preload_hops(self) -> float:
+        if self.topology == "all2all":
+            return 1.0
+        r, c = self.mesh_shape
+        return max((r + c) / 4.0, 1.0)
+
+    @property
+    def dist_hops(self) -> float:
+        return 1.0 if self.topology == "all2all" else 2.0
+
+    @property
+    def preload_noc_bw(self) -> float:
+        """Effective HBM-controller->cores delivery bandwidth over the NoC."""
+        return self.noc_capacity / self.preload_hops
+
+    def noc_occupancy(self, exec_bytes: float, preload_bytes: float,
+                      dist_bytes: float = 0.0) -> float:
+        """Seconds of aggregate link capacity consumed by a traffic mix."""
+        weighted = (exec_bytes + preload_bytes * self.preload_hops
+                    + dist_bytes * self.dist_hops)
+        return weighted / self.noc_capacity
+
+    def scaled(self, **kw) -> "ChipConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Reference chips
+# ---------------------------------------------------------------------------
+
+def ipu_mk2() -> ChipConfig:
+    """One Graphcore IPU MK2 (paper §2.1): 1472 cores x 624KB, 5.5GB/s links."""
+    return ChipConfig(
+        name="ipu-mk2",
+        num_cores=1472,
+        sram_per_core=624 * KB,
+        # 250 TFLOPS/chip fp16 => ~170 GFLOPS/core for matmul; vector ~1/32.
+        core_flops=250e12 / 1472,
+        core_flops_vector=31.2e12 / 1472,
+        sram_bw_per_core=128 / 8 * 1.325e9,  # 128 bits/cycle @ 1.325GHz (§2.3)
+        link_bw=5.5 * GB,
+        topology="all2all",
+        hbm_bw=0.0,
+    )
+
+
+def ipu_pod4_hbm(hbm_bw: float = 16 * TB, topology: Topology = "all2all") -> ChipConfig:
+    """The paper's emulator target: IPU-POD4 (4xMK2 = 5888 cores, 3.5GB SRAM)
+    + 4 HBM3E modules per chip => 16TB/s aggregate (paper §6.1)."""
+    return ChipConfig(
+        name="ipu-pod4-hbm",
+        num_cores=5888,
+        sram_per_core=624 * KB,
+        core_flops=1000e12 / 5888,          # 1 PFLOPS pod for MatMul (paper §6.3)
+        core_flops_vector=4 * 31.2e12 / 5888,
+        sram_bw_per_core=128 / 8 * 1.325e9,  # 128 bits/cycle @1.325GHz (paper §2.3)
+        link_bw=5.5 * GB,
+        topology=topology,
+        num_chips=4,
+        hbm_bw=hbm_bw,
+        hbm_controllers=16,                  # 4 modules x 4 chips
+        sram_port_blocking=True,
+    )
+
+
+def tpu_v5e_pod(num_chips: int = 256) -> ChipConfig:
+    """A TPU v5e pod read as one ICCA chip (DESIGN.md §3A): chips=cores,
+    ICI=inter-core links, per-chip HBM='SRAM', host DRAM/the pod's own sharded
+    weight store = 'off-chip'.  Constants per the assignment: 197 TFLOP/s bf16,
+    819 GB/s HBM, ~50 GB/s/link ICI."""
+    return ChipConfig(
+        name=f"tpu-v5e-{num_chips}",
+        num_cores=num_chips,
+        sram_per_core=16 * GB,              # per-chip HBM as the local store
+        core_flops=197e12,
+        core_flops_vector=197e12 / 16,
+        sram_bw_per_core=819 * GB,
+        link_bw=50 * GB,
+        topology="mesh2d",
+        mesh_dims=(16, num_chips // 16) if num_chips % 16 == 0 else (0, 0),
+        hbm_bw=819 * GB * num_chips * 0.1,  # host->HBM aggregate (DCN-limited)
+        hbm_controllers=num_chips // 4,
+        link_latency=1e-6,
+        sram_port_blocking=False,           # HBM not blocked by ICI traffic
+        reserved_per_core=0,
+    )
+
+
+def tpu_v5e_vmem() -> ChipConfig:
+    """One TPU v5e chip read as an ICCA chip at the VMEM level (DESIGN.md §3B):
+    the single TensorCore's VMEM is the on-chip memory, HBM the off-chip one.
+    Used by core/integration.vmem_plan() to pick Pallas block shapes."""
+    return ChipConfig(
+        name="tpu-v5e-vmem",
+        num_cores=1,
+        sram_per_core=128 * MB,
+        core_flops=197e12,
+        core_flops_vector=197e12 / 16,
+        sram_bw_per_core=40 * TB,           # VMEM->MXU feed bandwidth (approx)
+        link_bw=819 * GB,                   # 'interconnect' = HBM bus
+        topology="all2all",
+        hbm_bw=819 * GB,
+        hbm_controllers=1,
+        sram_port_blocking=False,
+        reserved_per_core=0,
+    )

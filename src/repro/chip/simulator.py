@@ -1,0 +1,240 @@
+"""Event-driven ICCA chip simulator (paper §5 "Simulation framework").
+
+Simulates the execution of an ELK ``ExecutionPlan`` over three contended
+resources, independently of the scheduler's own cost estimates:
+
+* **HBM** — serves preloads one at a time in preload order (§4.5 rule 2),
+  gated by on-chip space and MoE routing deps.
+* **NoC** — processor-sharing fluid model over the aggregate interconnect
+  capacity; concurrent flows (preload delivery, data distribution,
+  execution-time rotation) split the capacity, topology hop-weights from
+  ``ChipConfig.noc_occupancy``'s constants.  A flow that gets less rate
+  than it demands stretches its phase — that is exactly the paper's
+  contention ②/③.
+* **Cores** — execute ops sequentially; an op's execute phase cannot run
+  faster than its rotation traffic allows.
+
+Outputs everything Figures 17-24 read: total latency, the Fig-18(a)
+four-way breakdown, HBM/NoC utilization, achieved TFLOPS.  The simulator
+is also the DSE vehicle (§6.4): scale ``ChipConfig`` fields and re-run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+from repro.chip.config import ChipConfig
+from repro.core.plan import Breakdown, ExecutionPlan, Utilization
+
+_EPS = 1e-12
+
+
+@dataclasses.dataclass
+class _Flow:
+    kind: str               # "preload" | "dist" | "rot"
+    weighted_bytes: float   # bytes x hop weight remaining
+    demand_rate: float      # bytes/s the phase would consume unconstrained
+
+
+@dataclasses.dataclass
+class SimResult:
+    total_time: float
+    breakdown: Breakdown
+    util: Utilization
+    op_exec_end: list
+
+
+def simulate(plan: ExecutionPlan, chip: ChipConfig,
+             hbm_bw: Optional[float] = None) -> SimResult:
+    graph = plan.graph
+    n = len(graph.ops)
+    hbm_bw = hbm_bw if hbm_bw is not None else chip.hbm_bw
+    cap_noc = chip.noc_capacity
+    cap_mem = chip.usable_sram_per_core
+
+    pi = plan.preload_order
+    dec = {d.op_idx: d for d in plan.decisions}
+
+    # --- state ----------------------------------------------------------
+    t = 0.0
+    next_pre = 0                       # index into pi
+    pre_done = [False] * n
+    exe_done = [-1.0] * n
+    space_used = 0.0
+    cur = 0                            # next op to execute
+    # phases: per entity (hbm preload, executing op) a _Flow or timer
+    hbm_flow: Optional[_Flow] = None   # NoC side of the active preload
+    hbm_left = 0.0                     # HBM byte time remaining (s at full bw)
+    hbm_op = -1
+    exe_flow: Optional[_Flow] = None   # dist or rot flow of current op
+    exe_left = 0.0                     # pure-compute seconds remaining
+    exe_phase = "idle"                 # idle | dist | run
+    # accounting
+    busy_hbm = 0.0
+    busy_exec = 0.0
+    overlap = 0.0
+    noc_bytes_served = 0.0
+    stall = 0.0
+
+    def preload_space(j: int) -> float:
+        p = dec[j].preload_plan
+        return p.space if p else 0.0
+
+    def exec_space(j: int) -> float:
+        return dec[j].exec_plan.space
+
+    def can_start_preload(j: int) -> bool:
+        if graph.ops[j].preload_dep >= 0 and \
+                exe_done[graph.ops[j].preload_dep] < 0:
+            return False
+        return space_used + preload_space(j) <= cap_mem + _EPS
+
+    def start_next_preload():
+        nonlocal next_pre, hbm_flow, hbm_left, hbm_op, space_used
+        while next_pre < n:
+            j = pi[next_pre]
+            if pre_done[j]:
+                next_pre += 1
+                continue
+            if exe_done[j] >= 0:       # already executed (tiny op, no data)
+                pre_done[j] = True
+                next_pre += 1
+                continue
+            if not can_start_preload(j):
+                return
+            p = dec[j].preload_plan
+            hbm_op = j
+            hbm_left = (p.hbm_bytes / hbm_bw) if (p and hbm_bw) else 0.0
+            w = (p.noc_preload_bytes * chip.preload_hops) if p else 0.0
+            hbm_flow = _Flow("preload", w, chip.preload_noc_bw)
+            space_used += preload_space(j)
+            next_pre += 1
+            return
+
+    def start_exec():
+        nonlocal exe_flow, exe_left, exe_phase, space_used
+        if cur >= n or exe_phase != "idle" or not pre_done[cur]:
+            return
+        d = dec[cur]
+        p = d.preload_plan
+        space_used += exec_space(cur) - (preload_space(cur))
+        if p and p.noc_dist_bytes > 0:
+            exe_phase = "dist"
+            exe_flow = _Flow("dist", p.noc_dist_bytes * chip.dist_hops,
+                             cap_noc)
+        else:
+            _enter_run()
+
+    def _enter_run():
+        nonlocal exe_phase, exe_flow, exe_left
+        d = dec[cur]
+        exe_phase = "run"
+        exe_left = d.exec_plan.time
+        rot = d.exec_plan.noc_exec_bytes
+        exe_flow = _Flow("rot", float(rot), cap_noc) if rot else None
+
+    start_next_preload()
+    start_exec()
+
+    guard = 0
+    while cur < n and guard < 400 * n + 20000:
+        guard += 1
+        if exe_phase == "idle" and hbm_flow is None and hbm_left <= 0:
+            # deadlock-or-done check: try to make progress
+            start_next_preload()
+            start_exec()
+            if exe_phase == "idle" and hbm_op < 0:
+                # nothing active: advance by marking next preload done
+                if next_pre >= n and cur < n and not pre_done[cur]:
+                    pre_done[cur] = True     # defensive: zero-data op
+                    start_exec()
+                    continue
+                if exe_phase == "idle":
+                    break
+
+        # processor sharing: flows active on the NoC
+        flows = [f for f in (hbm_flow, exe_flow) if f is not None]
+        share = cap_noc / max(len(flows), 1)
+        rates = {id(f): min(share, f.demand_rate) for f in flows}
+
+        # time to next completion event
+        dts = []
+        if hbm_op >= 0:
+            d_hbm = hbm_left
+            d_noc = (hbm_flow.weighted_bytes / rates[id(hbm_flow)]
+                     if hbm_flow and hbm_flow.weighted_bytes > 0 else 0.0)
+            dts.append(max(d_hbm, d_noc))
+        if exe_phase == "dist" and exe_flow:
+            dts.append(exe_flow.weighted_bytes / rates[id(exe_flow)])
+        elif exe_phase == "run":
+            d_comp = exe_left
+            d_rot = (exe_flow.weighted_bytes / rates[id(exe_flow)]
+                     if exe_flow and exe_flow.weighted_bytes > 0 else 0.0)
+            dts.append(max(d_comp, d_rot))
+        if not dts:
+            break
+        dt = max(min(dts), 1e-9)
+
+        # advance
+        hbm_active = hbm_op >= 0
+        exe_active = exe_phase != "idle"
+        if hbm_active and exe_active:
+            overlap += dt
+        elif hbm_active:
+            busy_hbm += dt
+        elif exe_active:
+            busy_exec += dt
+        if hbm_active:
+            hbm_left = max(0.0, hbm_left - dt)
+            if hbm_flow:
+                served = rates[id(hbm_flow)] * dt
+                hbm_flow.weighted_bytes = max(
+                    0.0, hbm_flow.weighted_bytes - served)
+                noc_bytes_served += served
+        if exe_active and exe_flow:
+            served = rates[id(exe_flow)] * dt
+            exe_flow.weighted_bytes = max(0.0, exe_flow.weighted_bytes - served)
+            noc_bytes_served += served
+        if exe_phase == "run":
+            exe_left = max(0.0, exe_left - dt)
+        t += dt
+
+        # completions
+        if hbm_active and hbm_left <= _EPS and (
+                hbm_flow is None or hbm_flow.weighted_bytes <= _EPS):
+            pre_done[hbm_op] = True
+            hbm_op, hbm_flow, hbm_left = -1, None, 0.0
+            start_next_preload()
+        if exe_phase == "dist" and exe_flow and \
+                exe_flow.weighted_bytes <= _EPS:
+            _enter_run()
+        elif exe_phase == "run" and exe_left <= _EPS and (
+                exe_flow is None or exe_flow.weighted_bytes <= _EPS):
+            d = dec[cur]
+            if exe_left <= _EPS and exe_flow is not None:
+                stall += 0.0
+            exe_done[cur] = t
+            space_used = max(0.0, space_used - exec_space(cur))
+            exe_phase, exe_flow = "idle", None
+            cur += 1
+            start_next_preload()
+            start_exec()
+
+    total = t
+    flops = sum(op.flops for op in graph.ops)
+    hbm_bytes = sum((dec[j].preload_plan.hbm_bytes
+                     if dec[j].preload_plan else 0) for j in range(n))
+    util = Utilization(
+        hbm=min(hbm_bytes / (hbm_bw * total), 1.0) if (hbm_bw and total)
+        else 0.0,
+        interconnect=min(noc_bytes_served / (cap_noc * total), 1.0)
+        if total else 0.0,
+        flops=min(flops / (chip.total_flops * total), 1.0) if total else 0.0,
+        achieved_tflops=flops / total / 1e12 if total else 0.0,
+    )
+    idle = max(0.0, total - busy_hbm - busy_exec - overlap)
+    breakdown = Breakdown(preload_only=busy_hbm, execute_only=busy_exec,
+                          overlapped=overlap, interconnect_stall=idle)
+    return SimResult(total, breakdown, util, exe_done)

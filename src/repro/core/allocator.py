@@ -1,0 +1,127 @@
+"""Cost-aware on-chip memory allocation (paper §4.3).
+
+Given the currently executing operator and the set of operators preloaded
+(resident) during its execution, jointly pick:
+
+* the execute-state plan of the current op (Tradeoff 1: space <-> time),
+* the preload-state plan of each resident op (Tradeoffs 2+3: space <->
+  data-distribution time / exec-time inter-core traffic),
+
+such that everything fits in on-chip memory and total window time is
+minimized.  Exactly the paper's iterative greedy: start every op at its
+fastest (largest-space) Pareto plan; while over capacity, downgrade the op
+whose next Pareto step has the best ratio ``delta = freed_space /
+added_time``; stop when it fits (or report infeasible).
+
+The window cost combines (1) execution time, (2) data-distribution times,
+(3) interconnect contention (total traffic / aggregate bandwidth, §4.3), and
+(4) SRAM access contention (folded into ExecPlan.time per footnote 2).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Sequence
+
+from repro.chip.config import ChipConfig
+from repro.core.partition import ExecPlan, PreloadPlan
+
+
+@dataclasses.dataclass(frozen=True)
+class WindowItem:
+    """One op's Pareto curve inside an allocation window."""
+    op_idx: int
+    role: str                       # "exec" | "preload"
+    plans: Sequence                 # ExecPlan list or PreloadPlan list
+    fixed: bool = False             # plan already bound by an earlier window
+    fixed_choice: int = 0
+
+
+@dataclasses.dataclass
+class Allocation:
+    feasible: bool
+    choices: dict[int, int]              # op_idx -> plan index on its curve
+    exec_time: float                     # current op execution (incl. rotation)
+    dist_time: float                     # sum of resident ops' future dist time
+    noc_time: float                      # window interconnect occupancy (s)
+    space: int                           # total per-core bytes
+    cost: float                          # scalar objective used by the search
+
+    def exec_plan(self, item: WindowItem) -> ExecPlan:
+        return item.plans[self.choices[item.op_idx]]
+
+
+def _space_of(item: WindowItem, j: int) -> int:
+    p = item.plans[j]
+    return p.space
+
+
+def _window_cost(chip: ChipConfig, items: Sequence[WindowItem],
+                 choice: dict[int, int], extra_preload_noc: float = 0.0,
+                 ) -> tuple[float, float, float, float]:
+    """Returns (cost, exec_time, dist_time, noc_time).
+
+    ``extra_preload_noc`` carries the HBM-controller->core delivery bytes of
+    the preloads *issued during* this window (scheduler-provided).  Resident
+    ops' delivery traffic was charged to the window that issued it — counting
+    it again here would double-book the interconnect and wrongly punish deep
+    preloads.  Residents contribute only their (future) data-distribution
+    time, which the greedy descent trades against space.
+    """
+    exec_t = 0.0
+    dist_t = 0.0
+    exec_noc = 0.0
+    for it in items:
+        p = it.plans[choice[it.op_idx]]
+        if it.role == "exec":
+            exec_t += p.time
+            exec_noc += p.noc_exec_bytes
+        else:
+            dist_t += p.dist_time
+    noc_t = chip.noc_occupancy(exec_noc, extra_preload_noc)
+    # contention: interconnect time beyond what hides under execution stalls
+    # the window (paper Fig. 18's "interconnect" category).
+    stall = max(0.0, noc_t - exec_t)
+    cost = exec_t + dist_t + stall
+    return cost, exec_t, dist_t, noc_t
+
+
+def allocate(chip: ChipConfig, items: Sequence[WindowItem],
+             capacity: Optional[int] = None,
+             extra_preload_noc: float = 0.0) -> Allocation:
+    cap = capacity if capacity is not None else chip.usable_sram_per_core
+    choice = {it.op_idx: (it.fixed_choice if it.fixed else 0) for it in items}
+    space = sum(_space_of(it, choice[it.op_idx]) for it in items)
+
+    def steppable(it: WindowItem) -> bool:
+        return (not it.fixed) and choice[it.op_idx] + 1 < len(it.plans)
+
+    while space > cap:
+        best = None
+        for it in items:
+            if not steppable(it):
+                continue
+            j = choice[it.op_idx]
+            cur, nxt = it.plans[j], it.plans[j + 1]
+            freed = cur.space - nxt.space
+            if freed <= 0:
+                continue
+            if it.role == "exec":
+                added = nxt.time - cur.time
+            else:
+                added = nxt.dist_time - cur.dist_time
+            delta = freed / max(added, 1e-12)
+            if best is None or delta > best[0]:
+                best = (delta, it)
+        if best is None:
+            return Allocation(False, choice, math.inf, math.inf, math.inf,
+                              space, math.inf)
+        _, it = best
+        old = _space_of(it, choice[it.op_idx])
+        choice[it.op_idx] += 1
+        space += _space_of(it, choice[it.op_idx]) - old
+
+    cost, exec_t, dist_t, noc_t = _window_cost(chip, items, choice,
+                                               extra_preload_noc)
+    return Allocation(True, choice, exec_t, dist_t, noc_t, space, cost)

@@ -1,0 +1,120 @@
+"""The §6.1 ablation designs: Basic, Static, ELK-Dyn, ELK-Full, Ideal.
+
+* ``Basic`` — existing-DL-compiler behaviour: maximize execution space, use
+  whatever remains to preload *the next operator only*.
+* ``Static`` — T10 [34] extended with HBM support, SambaNova-style multi-op
+  preload into a statically reserved preload space; the best static split is
+  chosen per model (paper: "the sizes will not change throughout the model
+  execution"); preload-state plans are all-max or all-min footprint,
+  whichever is faster end-to-end.
+* ``ELK-Dyn`` — §4.2 scheduling + §4.3 allocation, no reordering.
+* ``ELK-Full`` — everything incl. §4.4 preload order permutation.
+* ``Ideal`` — the roofline: dedicated interconnects for preload and
+  execution, full-size memory for every op, zero-latency data distribution.
+"""
+
+from __future__ import annotations
+
+import math
+
+from repro.chip.config import ChipConfig
+from repro.core.cost_model import AnalyticCostModel
+from repro.core.graph import OpGraph
+from repro.core.partition import enumerate_exec_plans
+from repro.core.plan import (Breakdown, ExecutionPlan, OpDecision, OpTiming,
+                             Utilization)
+from repro.core.reorder import best_reordered_plan
+from repro.core.scheduler import Scheduler
+
+DESIGNS = ("Basic", "Static", "ELK-Dyn", "ELK-Full", "Ideal")
+
+
+def build_plan(graph: OpGraph, chip: ChipConfig, design: str,
+               max_orders: int = 24) -> ExecutionPlan:
+    if design == "Basic":
+        sched = Scheduler(graph, chip, max_preload=1, exec_fastest=True)
+        return sched.schedule(design="Basic")
+    if design == "Static":
+        return _static_plan(graph, chip)
+    if design == "ELK-Dyn":
+        return _elk_dyn(graph, chip)
+    if design == "ELK-Full":
+        sched = Scheduler(graph, chip)
+        best = best_reordered_plan(sched, graph, chip, max_orders=max_orders)
+        dyn = _elk_dyn(graph, chip, design="ELK-Full")
+        return dyn if dyn.total_time < best.total_time else best
+    if design == "Ideal":
+        return ideal_plan(graph, chip)
+    raise KeyError(design)
+
+
+def _elk_dyn(graph: OpGraph, chip: ChipConfig,
+             design: str = "ELK-Dyn") -> ExecutionPlan:
+    """ELK's dynamic scheduling.  The exact §4.2/§4.3 search dominates any
+    fixed execution-space split by construction; our greedy allocator is
+    approximate, so the search space is explicitly widened with the capped
+    variants (a fixed cap is one point of the paper's search space) and
+    the best schedule wins."""
+    cap = chip.usable_sram_per_core
+    best = Scheduler(graph, chip).schedule(design=design)
+    for frac in (0.25, 0.5, 0.75):
+        for pfrac in (None, 0.0, 1.0):
+            s = Scheduler(graph, chip, exec_space_cap=int(cap * frac),
+                          static_preload_frac=pfrac)
+            p = s.schedule(design=design)
+            if p.total_time < best.total_time:
+                best = p
+    return best
+
+
+def _static_plan(graph: OpGraph, chip: ChipConfig) -> ExecutionPlan:
+    cap = chip.usable_sram_per_core
+    best = None
+    for frac in (0.25, 0.5, 0.75):
+        for pfrac in (0.0, 1.0):
+            sched = Scheduler(graph, chip,
+                              exec_space_cap=int(cap * frac),
+                              static_preload_frac=pfrac)
+            plan = sched.schedule(design="Static")
+            if best is None or plan.total_time < best.total_time:
+                best = plan
+    return best
+
+
+def ideal_plan(graph: OpGraph, chip: ChipConfig) -> ExecutionPlan:
+    """Roofline (paper §6.1 'Ideal'): exec pipeline and preload pipeline each
+    run at full speed on private resources; total = max of the two."""
+    cost = AnalyticCostModel(chip)
+    n = len(graph.ops)
+    timing = [OpTiming() for _ in range(n)]
+    decisions = []
+    t_exec_sum = 0.0
+    t_pre_sum = 0.0
+    for i, op in enumerate(graph.ops):
+        plans = enumerate_exec_plans(op, chip, cost)
+        fastest = plans[0]
+        t_exec_sum += fastest.time
+        t_pre = cost.hbm_time(op.hbm_bytes) if op.hbm_bytes else 0.0
+        t_pre_sum += t_pre
+        timing[i].t_s_exe = t_exec_sum - fastest.time
+        timing[i].t_e_exe = t_exec_sum
+        timing[i].t_s_pre = t_pre_sum - t_pre
+        timing[i].t_e_pre = t_pre_sum
+        decisions.append(OpDecision(i, 0, fastest, None))
+    total = max(t_exec_sum, t_pre_sum)
+    flops = sum(op.flops for op in graph.ops)
+    hbm_bytes = sum(op.hbm_bytes for op in graph.ops)
+    util = Utilization(
+        hbm=min(hbm_bytes / (chip.hbm_bw * total), 1.0) if chip.hbm_bw else 0.0,
+        interconnect=0.0,
+        flops=min(flops / (chip.total_flops * total), 1.0),
+        achieved_tflops=flops / total / 1e12,
+    )
+    overlap = min(t_exec_sum, t_pre_sum)
+    breakdown = Breakdown(
+        preload_only=max(0.0, t_pre_sum - overlap),
+        execute_only=max(0.0, t_exec_sum - overlap),
+        overlapped=overlap,
+        interconnect_stall=0.0)
+    return ExecutionPlan(graph, chip.name, "Ideal", decisions,
+                         list(range(n)), timing, total, breakdown, util)

@@ -1,0 +1,430 @@
+"""Two-level inductive operator scheduling (paper §4.2) + plan finalization.
+
+Search (backward induction, Lemma 4.1 / Theorem 4.2)
+----------------------------------------------------
+Operators execute in graph order; preloads are issued sequentially in a
+(possibly reordered, §4.4) preload order ``pi``.  The decision variable per
+operator ``i`` is the *cumulative issue count* ``c_i`` — how many preloads
+(positions in ``pi``) have been issued before ``exec(i)`` starts.  The
+paper's "preload number" is ``p_i = c_i - (i+1)`` = operators resident
+on-chip in preload state while ``i`` executes.
+
+Walking backward from the last operator, each step enumerates feasible
+``c_i`` (memory-checked by the §4.3 allocator) and keeps the one minimizing
+the *current-to-end* time — exactly Fig. 10.  Hardware rules (§4.5) are
+honored: preloads are sequential; preload position ``m >= c_i`` cannot start
+until ``exec(i)`` finishes; an operator must be preloaded before executing;
+MoE expert preloads cannot be issued before their router executes (§7).
+
+Finalization (forward)
+----------------------
+The backward pass may re-decide a resident op's preload plan in several
+windows (the paper leaves this implicit).  A forward re-allocation pass walks
+windows in execution order, *fixing* each op's preload plan in the window
+where its preload is issued, and recomputes exact start/end times, the
+Fig.-18 breakdown, and utilizations.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Sequence
+
+from repro.chip.config import ChipConfig
+from repro.core.allocator import WindowItem, allocate
+from repro.core.cost_model import AnalyticCostModel
+from repro.core.graph import OpGraph
+from repro.core.partition import (ExecPlan, PreloadPlan, enumerate_exec_plans,
+                                  enumerate_preload_plans)
+from repro.core.plan import (Breakdown, ExecutionPlan, OpDecision, OpTiming,
+                             Utilization)
+
+_NEG_INF = -math.inf
+
+
+@dataclasses.dataclass
+class _OpCurves:
+    exec_plans: list[ExecPlan]
+    # preload curves depend on the chosen exec plan; cached per exec choice
+    _pre_cache: dict = dataclasses.field(default_factory=dict)
+
+    def preload_plans(self, op, exec_idx: int, chip, cost) -> list[PreloadPlan]:
+        if exec_idx not in self._pre_cache:
+            self._pre_cache[exec_idx] = enumerate_preload_plans(
+                op, self.exec_plans[exec_idx], chip, cost)
+        return self._pre_cache[exec_idx]
+
+
+class Scheduler:
+    """§4.2 scheduler for one operator graph on one chip."""
+
+    def __init__(self, graph: OpGraph, chip: ChipConfig,
+                 cost: Optional[AnalyticCostModel] = None,
+                 max_preload: int = 64,
+                 exec_space_cap: Optional[int] = None,
+                 static_preload_frac: Optional[float] = None,
+                 exec_fastest: bool = False):
+        self.graph = graph
+        self.chip = chip
+        self.cost = cost or AnalyticCostModel(chip)
+        self.max_preload = max_preload
+        # Baseline knobs (§6.1): a fixed execution-space budget (Static), a
+        # fixed preload-plan policy, and Basic's "maximize execution space"
+        # rule; all None/False = full ELK behaviour.
+        self.exec_space_cap = exec_space_cap
+        self.static_preload_frac = static_preload_frac
+        self.exec_fastest = exec_fastest
+        self.curves = [self._curves(op) for op in graph.ops]
+
+    # -- plan curves ---------------------------------------------------------
+    def _curves(self, op) -> _OpCurves:
+        plans = enumerate_exec_plans(op, self.chip, self.cost)
+        if self.exec_space_cap is not None:
+            fit = [p for p in plans if p.space <= self.exec_space_cap]
+            plans = [min(fit or plans, key=lambda p: p.time)]
+        return _OpCurves(plans)
+
+    def _exec_curve(self, i: int) -> list[ExecPlan]:
+        return self.curves[i].exec_plans
+
+    def _pre_curve(self, i: int, exec_idx: int) -> list[PreloadPlan]:
+        plans = self.curves[i].preload_plans(
+            self.graph.ops[i], exec_idx, self.chip, self.cost)
+        if self.static_preload_frac is not None:
+            # Static baseline: largest- or smallest-footprint plan only
+            pick = plans[0] if self.static_preload_frac >= 0.5 else plans[-1]
+            return [pick]
+        return plans
+
+    # -- main entry -----------------------------------------------------------
+    def schedule(self, preload_order: Optional[Sequence[int]] = None,
+                 design: str = "ELK-Dyn") -> ExecutionPlan:
+        graph, chip = self.graph, self.chip
+        n = len(graph.ops)
+        pi = list(preload_order) if preload_order is not None else list(range(n))
+        assert sorted(pi) == list(range(n)), "preload order must be a permutation"
+        self._pi = pi
+        pos = [0] * n
+        for m, j in enumerate(pi):
+            pos[j] = m
+
+        # MoE/etc: cap on c_i from preload deps (op j preloadable only after
+        # its dep executed): while i <= dep(j), c_i <= pos[j].
+        dep_cap = [n] * (n + 1)
+        for j, op in enumerate(graph.ops):
+            if op.preload_dep >= 0:
+                for i in range(0, min(op.preload_dep + 1, n)):
+                    dep_cap[i] = min(dep_cap[i], pos[j])
+
+        # c_min(i): every op executed by step i must have been preloaded.
+        c_min = [0] * n
+        run = 0
+        for i in range(n):
+            run = max(run, pos[i] + 1)
+            c_min[i] = run
+
+        # ---- backward induction -------------------------------------------
+        exec_choice = [0] * n              # index into exec curve
+        c_seq = [0] * (n + 1)
+        c_seq[n] = n
+        tau_s_exe = [0.0] * (n + 1)        # time-before-end of exec start
+        tau_s_pre = [_NEG_INF] * (n + 1)   # per preload position
+        l_exe = [0.0] * n
+
+        for i in range(n - 1, -1, -1):
+            c_next = c_seq[i + 1]
+            best = None
+            lo = c_min[i]
+            hi = min(c_next, i + 1 + self.max_preload, dep_cap[i])
+            hi = max(hi, lo)
+            for c in range(lo, hi + 1):
+                alloc, items = self._allocate_window(i, c, c_next, exec_choice)
+                if not alloc.feasible:
+                    # residents grow with c => larger c stays infeasible
+                    if c > lo:
+                        break
+                    continue
+                lexe = alloc.exec_time + max(
+                    0.0, alloc.noc_time - alloc.exec_time)
+                # schedule new preload positions [c, c_next) latest-first
+                tau_pre_local = {}
+                nxt = tau_s_pre[c_next] if c_next < n else _NEG_INF
+                for m in range(c_next - 1, c - 1, -1):
+                    j = pi[m]
+                    t_end = max(tau_s_exe_at(tau_s_exe, j, n), nxt)
+                    lpre = self._preload_time(j, exec_choice)
+                    tau_pre_local[m] = t_end + lpre
+                    nxt = tau_pre_local[m]
+                blocker = tau_pre_local.get(c, tau_s_pre[c] if c < n else _NEG_INF)
+                tau_e = max(tau_s_exe[i + 1], blocker, 0.0)
+                tau_s = tau_e + lexe
+                if best is None or tau_s < best[0] - 1e-15:
+                    best = (tau_s, c, alloc, items, tau_pre_local, lexe)
+            if best is None:
+                # cannot fit even c = c_min: fall back to minimal window with
+                # smallest plans (degenerate but schedulable)
+                c = lo
+                alloc, items = self._allocate_window(i, c, c_next, exec_choice,
+                                                     force=True)
+                lexe = alloc.exec_time
+                best = (tau_s_exe[i + 1] + lexe, c, alloc, items, {}, lexe)
+            tau_s, c, alloc, items, tau_pre_local, lexe = best
+            c_seq[i] = c
+            tau_s_exe[i] = tau_s
+            l_exe[i] = lexe
+            for m, v in tau_pre_local.items():
+                tau_s_pre[m] = v
+            exec_choice[i] = alloc.choices[i]
+
+        # ---- forward finalization ------------------------------------------
+        return self._finalize(pi, pos, c_seq, exec_choice, design)
+
+    # -- window construction --------------------------------------------------
+    def _allocate_window(self, i: int, c: int, c_next: int,
+                         exec_choice: list[int], force: bool = False):
+        """Window for exec(i) with cumulative issue count ``c``.
+
+        Space: ops resident at the window start — issued (< c) and not yet
+        executed (> i).  This is the paper's Fig.-4 capacity tradeoff: a
+        deeper preload (larger c) leaves less execution space.
+        Traffic: preloads *issued during* this window ([c, c_next)) put their
+        HBM-controller->core delivery bytes on the interconnect here; the
+        already-resident ops' delivery was charged to their issuing window.
+        """
+        pi = self._pi
+        pi_resident = [j for j in pi[:c] if j > i]
+        if self.exec_fastest:
+            # Basic (§6.1): execution space maximized, preloads squeeze into
+            # the remainder.
+            items = [WindowItem(i, "exec", self._exec_curve(i),
+                                fixed=True, fixed_choice=0)]
+        else:
+            items = [WindowItem(i, "exec", self._exec_curve(i))]
+        for j in pi_resident:
+            items.append(WindowItem(
+                j, "preload", self._pre_curve(j, exec_choice[j])))
+        extra_noc = sum(self._preload_noc_estimate(pi[m], exec_choice)
+                        for m in range(c, c_next))
+        cap = self.chip.usable_sram_per_core
+        alloc = allocate(self.chip, items, capacity=cap,
+                         extra_preload_noc=extra_noc)
+        if not alloc.feasible and force:
+            # take the smallest plans unconditionally
+            choice = {it.op_idx: len(it.plans) - 1 for it in items}
+            from repro.core.allocator import _window_cost
+            cost, e, d, nt = _window_cost(self.chip, items, choice, extra_noc)
+            alloc = dataclasses.replace(
+                alloc, feasible=True, choices=choice, exec_time=e,
+                dist_time=d, noc_time=nt, cost=cost)
+        return alloc, items
+
+    def _preload_noc_estimate(self, j: int, exec_choice: list[int]) -> float:
+        """Delivery bytes of op j's preload (min-space plan estimate; the
+        forward finalization recomputes with the bound plan)."""
+        return self._pre_curve(j, exec_choice[j])[-1].noc_preload_bytes
+
+    def _preload_time(self, j: int, exec_choice: list[int]) -> float:
+        """Paper §4.2: max(HBM roofline time, interconnect transfer time)."""
+        op = self.graph.ops[j]
+        pre = self._pre_curve(j, exec_choice[j])
+        plan = pre[-1]  # minimum-space estimate; finalization refines
+        t_hbm = self.cost.hbm_time(plan.hbm_bytes)
+        t_noc = plan.noc_preload_bytes / self.chip.preload_noc_bw
+        return max(t_hbm, t_noc)
+
+    # -- finalization ----------------------------------------------------------
+    def _finalize(self, pi, pos, c_seq, exec_choice, design) -> ExecutionPlan:
+        graph, chip, n = self.graph, self.chip, len(self.graph.ops)
+        # Two-phase binding.  Phase 1: allocate every window independently
+        # and record each resident op's chosen preload plan per window.
+        # Phase 2: bind each op to its *min-space* choice across all windows
+        # it is resident in — the loaded plan must fit the tightest window
+        # it lives through, and binding at issue time (where space is
+        # plentiful) was measured to starve later windows so badly that
+        # ELK-Dyn fell behind Basic on KV-heavy shapes.
+        seen_choice: dict[int, int] = {}
+        for i in range(n):
+            residents = [j for j in pi[:c_seq[i]] if j > i]
+            items = [WindowItem(i, "exec", self._exec_curve(i),
+                                fixed=True, fixed_choice=exec_choice[i])]
+            for j in residents:
+                items.append(WindowItem(
+                    j, "preload", self._pre_curve(j, exec_choice[j])))
+            alloc, _ = self._allocate_window_items(items, 0.0)
+            for j in residents:
+                seen_choice[j] = max(seen_choice.get(j, 0),
+                                     alloc.choices[j])
+
+        bound_pre: dict[int, PreloadPlan] = {}
+        bound_pre_idx: dict[int, int] = {}
+        for j, idx in seen_choice.items():
+            curve = self._pre_curve(j, exec_choice[j])
+            bound_pre_idx[j] = idx
+            bound_pre[j] = curve[idx]
+
+        stall = [0.0] * n
+        lexe = [0.0] * n
+        dist = [0.0] * n
+        for i in range(n):
+            residents = [j for j in pi[:c_seq[i]] if j > i]
+            items = [WindowItem(i, "exec", self._exec_curve(i),
+                                fixed=True, fixed_choice=exec_choice[i])]
+            for j in residents:
+                curve = self._pre_curve(j, exec_choice[j])
+                items.append(WindowItem(j, "preload", curve, fixed=True,
+                                        fixed_choice=bound_pre_idx[j]))
+            extra_noc = 0.0
+            for m in range(c_seq[i], c_seq[i + 1]):
+                j = pi[m]
+                if j in bound_pre:
+                    extra_noc += bound_pre[j].noc_preload_bytes
+                else:
+                    extra_noc += self._preload_noc_estimate(j, exec_choice)
+            alloc, _ = self._allocate_window_items(items, extra_noc)
+            lexe[i] = alloc.exec_time
+            stall[i] = max(0.0, alloc.noc_time - alloc.exec_time)
+        # ops never resident anywhere (executed immediately after preload /
+        # c window boundaries): bind min-space plan
+        for j in range(n):
+            if j not in bound_pre:
+                curve = self._pre_curve(j, exec_choice[j])
+                bound_pre_idx[j] = len(curve) - 1
+                bound_pre[j] = curve[-1]
+            dist[j] = bound_pre[j].dist_time
+
+        # exact forward timing
+        timing = [OpTiming() for _ in range(n)]
+        # c_seq is nondecreasing in i; position m is blocked by every i with
+        # c_i <= m; the binding (latest-exec) one is max{i : c_i <= m}.
+        blocker_of = [-1] * n
+        b, idx = -1, 0
+        for m in range(n):
+            while idx < n and c_seq[idx] <= m:
+                b = idx
+                idx += 1
+            blocker_of[m] = b
+
+        hbm_free = 0.0
+        for m in range(n):
+            j = pi[m]
+            t_blocked = (timing[blocker_of[m]].t_e_exe
+                         if blocker_of[m] >= 0 else 0.0)
+            dep = graph.ops[j].preload_dep
+            t_dep = timing[dep].t_e_exe if dep >= 0 else 0.0
+            t_start = max(hbm_free, t_blocked, t_dep)
+            plan = bound_pre[j]
+            lpre = max(self.cost.hbm_time(plan.hbm_bytes),
+                       plan.noc_preload_bytes / chip.preload_noc_bw)
+            timing[j].t_s_pre = t_start
+            timing[j].t_e_pre = t_start + lpre
+            hbm_free = timing[j].t_e_pre
+            # exec timing interleaves: fill exec times for ops whose preload
+            # completed — handled in second sweep below.
+
+        # exec sweep (depends on preload completion; preload blocked-by-exec
+        # constraint resolved by iterating to fixpoint, 2 passes suffice
+        # because blocking only delays preloads of *later* windows)
+        for _ in range(3):
+            t_prev = 0.0
+            for i in range(n):
+                t_s = max(t_prev, timing[i].t_e_pre)
+                timing[i].t_s_exe = t_s
+                timing[i].t_e_exe = t_s + dist[i] + lexe[i] + stall[i]
+                t_prev = timing[i].t_e_exe
+            hbm_free = 0.0
+            for m in range(n):
+                j = pi[m]
+                t_blocked = (timing[blocker_of[m]].t_e_exe
+                             if blocker_of[m] >= 0 else 0.0)
+                dep = graph.ops[j].preload_dep
+                t_dep = timing[dep].t_e_exe if dep >= 0 else 0.0
+                t_start = max(hbm_free, t_blocked, t_dep)
+                plan = bound_pre[j]
+                lpre = max(self.cost.hbm_time(plan.hbm_bytes),
+                           plan.noc_preload_bytes / chip.preload_noc_bw)
+                timing[j].t_s_pre = t_start
+                timing[j].t_e_pre = t_start + lpre
+                hbm_free = timing[j].t_e_pre
+
+        total = timing[n - 1].t_e_exe if n else 0.0
+        decisions = [OpDecision(i, c_seq[i] - (i + 1),
+                                self._exec_curve(i)[exec_choice[i]],
+                                bound_pre.get(i), stall[i])
+                     for i in range(n)]
+        breakdown = _breakdown(timing, stall, total)
+        util = _utilization(self, bound_pre, decisions, total)
+        return ExecutionPlan(graph, chip.name, design, decisions, pi, timing,
+                             total, breakdown, util)
+
+    def _allocate_window_items(self, items, extra_noc: float = 0.0):
+        alloc = allocate(self.chip, items, extra_preload_noc=extra_noc)
+        if not alloc.feasible:
+            choice = {it.op_idx: (it.fixed_choice if it.fixed
+                                  else len(it.plans) - 1) for it in items}
+            from repro.core.allocator import _window_cost
+            cost, e, d, nt = _window_cost(self.chip, items, choice, extra_noc)
+            alloc = dataclasses.replace(alloc, feasible=True, choices=choice,
+                                        exec_time=e, dist_time=d, noc_time=nt,
+                                        cost=cost)
+        return alloc, items
+
+    # preload order of the in-flight schedule() call
+    @property
+    def _pi_cache(self):
+        return self._pi
+
+    def schedule_with_order(self, pi, design="ELK-Full"):
+        return self.schedule(pi, design=design)
+
+
+def tau_s_exe_at(tau_s_exe: list[float], j: int, n: int) -> float:
+    return tau_s_exe[j] if j <= n else 0.0
+
+
+def _breakdown(timing: list[OpTiming], stall: list[float],
+               total: float) -> Breakdown:
+    """Interval arithmetic over preload vs exec busy spans (Fig. 18a)."""
+    events = []
+    for t in timing:
+        if t.t_e_pre > t.t_s_pre:
+            events.append((t.t_s_pre, t.t_e_pre, "p"))
+        if t.t_e_exe > t.t_s_exe:
+            events.append((t.t_s_exe, t.t_e_exe, "e"))
+    pts = sorted({0.0, total} | {x for s, e, _ in events for x in (s, e)})
+    b = Breakdown(interconnect_stall=sum(stall))
+    for a, z in zip(pts, pts[1:]):
+        mid = (a + z) / 2
+        has_p = any(s <= mid < e for s, e, k in events if k == "p")
+        has_e = any(s <= mid < e for s, e, k in events if k == "e")
+        span = z - a
+        if has_p and has_e:
+            b.overlapped += span
+        elif has_p:
+            b.preload_only += span
+        elif has_e:
+            b.execute_only += span
+    # stall time was folded inside exec spans; remove it from execute/overlap
+    b.execute_only = max(0.0, b.execute_only - sum(stall))
+    return b
+
+
+def _utilization(sched: "Scheduler", bound_pre, decisions, total
+                 ) -> Utilization:
+    chip = sched.chip
+    if total <= 0:
+        return Utilization()
+    hbm_bytes = sum(p.hbm_bytes for p in bound_pre.values())
+    noc_occ = sum(chip.noc_occupancy(0.0, p.noc_preload_bytes,
+                                     p.noc_dist_bytes)
+                  for p in bound_pre.values())
+    noc_occ += chip.noc_occupancy(
+        sum(d.exec_plan.noc_exec_bytes for d in decisions), 0.0)
+    flops = sum(op.flops for op in sched.graph.ops)
+    hbm = (hbm_bytes / (chip.hbm_bw * total)) if chip.hbm_bw else 0.0
+    return Utilization(
+        hbm=min(hbm, 1.0),
+        interconnect=min(noc_occ / total, 1.0),
+        flops=min(flops / (chip.total_flops * total), 1.0),
+        achieved_tflops=flops / total / 1e12,
+    )

@@ -1,0 +1,93 @@
+"""Deterministic synthetic token pipeline (+ optional memmap file loader).
+
+The training substrate needs a data source that is (a) deterministic under
+restart — step ``k`` always yields the same batch, so checkpoint/resume is
+bitwise reproducible, (b) cheap on CPU, (c) shaped exactly like the real
+thing.  Synthetic batches are seeded by ``(seed, step)`` alone; a restored
+trainer re-derives the stream from its step counter with no iterator state
+to checkpoint.
+
+``MemmapDataset`` reads a flat uint16/uint32 token file (the standard
+"packed tokens" format) for running the examples against real data when a
+corpus file is available.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models.frontends import frontend_embeddings
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    batch: int
+    seq: int
+    seed: int = 0
+    vocab_size: int = 32000
+
+
+class SyntheticLM:
+    """Markov-ish synthetic LM stream: next token depends on the previous
+    one (so a trained model's loss actually falls — used by train_e2e)."""
+
+    def __init__(self, cfg: DataConfig, model_cfg: Optional[ModelConfig] = None):
+        self.cfg = cfg
+        self.model_cfg = model_cfg
+
+    def batch_at(self, step: int) -> dict:
+        c = self.cfg
+        key = jax.random.fold_in(jax.random.PRNGKey(c.seed), step)
+        k1, k2 = jax.random.split(key)
+        base = jax.random.randint(k1, (c.batch, c.seq + 1), 0, c.vocab_size)
+        # structure: token_{t+1} = (token_t * 7 + 3) % V with prob .5
+        flip = jax.random.bernoulli(k2, 0.5, (c.batch, c.seq + 1))
+        seq = [base[:, 0]]
+        for t in range(1, c.seq + 1):
+            pred = (seq[-1] * 7 + 3) % c.vocab_size
+            seq.append(jnp.where(flip[:, t], pred, base[:, t]))
+        toks = jnp.stack(seq, axis=1)
+        out = {"tokens": toks[:, :-1].astype(jnp.int32),
+               "labels": toks[:, 1:].astype(jnp.int32)}
+        if self.model_cfg is not None:
+            out.update(frontend_embeddings(self.model_cfg, c.batch,
+                                           seed=c.seed + step))
+        return out
+
+    def __iter__(self) -> Iterator[dict]:
+        step = 0
+        while True:
+            yield self.batch_at(step)
+            step += 1
+
+
+class MemmapDataset:
+    """Flat token file -> deterministic (tokens, labels) batches."""
+
+    def __init__(self, path: str, cfg: DataConfig, dtype=np.uint16):
+        self.cfg = cfg
+        self.tokens = np.memmap(path, dtype=dtype, mode="r")
+        self.n_windows = (len(self.tokens) - 1) // cfg.seq
+
+    def batch_at(self, step: int) -> dict:
+        c = self.cfg
+        rng = np.random.default_rng(c.seed + step)
+        idx = rng.integers(0, self.n_windows, size=c.batch)
+        toks = np.stack([self.tokens[i * c.seq:(i + 1) * c.seq + 1]
+                         for i in idx]).astype(np.int32)
+        return {"tokens": jnp.asarray(toks[:, :-1]),
+                "labels": jnp.asarray(toks[:, 1:])}
+
+
+def make_dataset(cfg: DataConfig, model_cfg: Optional[ModelConfig] = None,
+                 path: Optional[str] = None):
+    if path and os.path.exists(path):
+        return MemmapDataset(path, cfg)
+    return SyntheticLM(cfg, model_cfg)

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for single-token decode attention over a ring KV cache."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q: jax.Array, k_cache: jax.Array,
+                         v_cache: jax.Array, slot_pos: jax.Array,
+                         q_pos, *, window: int = 0,
+                         scale: float | None = None) -> jax.Array:
+    """q: (B, Hq, D); caches: (B, Hkv, C, D); slot_pos: (C,) absolute
+    positions per slot (sentinel > q_pos for unwritten slots).
+    Returns (B, Hq, D)."""
+    b, hq, d = q.shape
+    hkv, c = k_cache.shape[1], k_cache.shape[2]
+    g = hq // hkv
+    sc = scale if scale is not None else d ** -0.5
+    qg = q.reshape(b, hkv, g, d)
+    logits = jnp.einsum("bhgd,bhkd->bhgk", qg.astype(jnp.float32),
+                        k_cache.astype(jnp.float32)) * sc
+    ok = slot_pos <= q_pos
+    if window:
+        ok &= slot_pos > q_pos - window
+    logits = jnp.where(ok[None, None, None, :], logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)
+    out = jnp.einsum("bhgk,bhkd->bhgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, hq, d).astype(q.dtype)

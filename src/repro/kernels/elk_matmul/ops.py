@@ -1,0 +1,27 @@
+"""Jit'd public wrapper for the ELK-blocked matmul.
+
+On TPU the Pallas kernel runs compiled; on CPU (this container) it runs in
+``interpret=True`` mode, executing the kernel body in Python for numerical
+validation against ``ref.py``."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.elk_matmul.kernel import elk_matmul
+from repro.kernels.elk_matmul.ref import matmul_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def matmul(x: jax.Array, y: jax.Array, *, bm: int = 256, bn: int = 256,
+           bk: int = 512, force_kernel: bool = False) -> jax.Array:
+    """Blocked matmul; Pallas on TPU, interpret-mode Pallas when forced on
+    CPU (tests), jnp oracle otherwise (fast CPU path for examples)."""
+    if _on_tpu():
+        return elk_matmul(x, y, bm=bm, bn=bn, bk=bk)
+    if force_kernel:
+        return elk_matmul(x, y, bm=bm, bn=bn, bk=bk, interpret=True)
+    return matmul_ref(x, y)

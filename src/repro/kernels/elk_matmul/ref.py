@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the ELK-blocked matmul."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x: jax.Array, y: jax.Array,
+               out_dtype=None) -> jax.Array:
+    """(M, K) @ (K, N) with fp32 accumulation."""
+    out = jnp.dot(x.astype(jnp.float32), y.astype(jnp.float32))
+    return out.astype(out_dtype or x.dtype)

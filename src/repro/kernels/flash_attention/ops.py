@@ -1,0 +1,21 @@
+"""Jit'd public wrapper for flash attention (TPU kernel / CPU fallback)."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ref import mha_ref
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              causal: bool = True, window: int = 0,
+              bq: int = 512, bk: int = 512,
+              force_kernel: bool = False) -> jax.Array:
+    if jax.default_backend() == "tpu":
+        return flash_attention(q, k, v, causal=causal, window=window,
+                               bq=bq, bk=bk)
+    if force_kernel:
+        return flash_attention(q, k, v, causal=causal, window=window,
+                               bq=bq, bk=bk, interpret=True)
+    return mha_ref(q, k, v, causal=causal, window=window)

@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for blockwise (flash) attention: causal / GQA / SWA."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mha_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+            causal: bool = True, window: int = 0,
+            scale: float | None = None) -> jax.Array:
+    """q: (B, Hq, S, D); k/v: (B, Hkv, S, D) -> (B, Hq, S, D).
+
+    fp32 softmax; GQA via head-group folding; ``window`` > 0 applies
+    sliding-window attention of that width."""
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    g = hq // hkv
+    sc = scale if scale is not None else d ** -0.5
+    qg = q.reshape(b, hkv, g, s, d)
+    logits = jnp.einsum("bhgqd,bhkd->bhgqk", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * sc
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(s)[None, :]
+    ok = jnp.ones((s, s), bool)
+    if causal:
+        ok &= kpos <= qpos
+    if window:
+        ok &= kpos > qpos - window
+    logits = jnp.where(ok, logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(jnp.float32))
+    return out.reshape(b, hq, s, d).astype(q.dtype)

@@ -1,0 +1,319 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST stay first: jax locks the device count at first
+initialization, and the production meshes below need 512 placeholder
+devices.  Everything else imports after.
+
+For each cell this driver:
+  1. builds the step function + ShapeDtypeStruct inputs (``launch.specs``),
+  2. ``jit(...).lower(...).compile()`` under the production mesh,
+  3. records ``memory_analysis()`` (fits-in-HBM evidence),
+     ``cost_analysis()`` (FLOPs/bytes) and the parsed collective schedule
+     (``launch.hlo_analysis``) into ``experiments/dryrun/<cell>.json``.
+
+Resumable: cells with an existing JSON are skipped unless --force.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3_14b \
+      --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCH_IDS, get_config
+from repro.launch.hlo_analysis import memory_summary, roofline_from_compiled
+from repro.launch.mesh import make_production_mesh, mesh_num_devices
+from repro.launch.specs import SHAPES, build_cell, eligible
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+
+def cell_path(arch: str, shape: str, mesh_name: str, mode: str) -> str:
+    tag = f"{arch}__{shape}__{mesh_name}" + ("" if mode == "elk"
+                                             else f"__{mode}")
+    return os.path.join(OUT_DIR, tag + ".json")
+
+
+def run_cell(arch: str, shape: str, mesh_name: str, *, mode: str = "elk",
+             prefetch_depth: int = 2, force: bool = False,
+             extra_tag: str = "") -> dict:
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = cell_path(arch, shape, mesh_name, mode)
+    if extra_tag:
+        path = path.replace(".json", f"__{extra_tag}.json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+
+    cfg = get_config(arch)
+    ok, why = eligible(cfg, shape)
+    rec = {"arch": arch, "shape": shape, "mesh": mesh_name, "mode": mode}
+    if not ok:
+        rec.update(status="skipped", reason=why)
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+    n_chips = mesh_num_devices(mesh)
+    t0 = time.time()
+    try:
+        cell = build_cell(arch, shape, mesh, mode=mode,
+                          prefetch_depth=prefetch_depth)
+        with mesh:
+            lowered = cell.fn.lower(*[a for a in cell.args])
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        mem = memory_summary(compiled)
+        rf, colls = roofline_from_compiled(
+            compiled, cell.meta["model_flops"], n_chips)
+        rec.update(
+            status="ok",
+            lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+            memory=mem,
+            fits_16gb=mem.get("total_hbm_bytes", 0) <= 16 * 1024 ** 3,
+            roofline=rf.to_dict(),
+            collectives={"counts": colls.counts,
+                         "by_kind_bytes": colls.by_kind_bytes,
+                         "result_bytes": colls.result_bytes},
+            meta=cell.meta,
+        )
+        print(f"[ok] {arch:28s} {shape:12s} {mesh_name:6s} "
+              f"compile={t_compile:6.1f}s "
+              f"hbm/dev={mem.get('total_hbm_bytes', 0)/2**30:7.2f}GiB "
+              f"dom={rf.dominant:10s} bound={rf.bound_s*1e3:9.3f}ms "
+              f"roofline={rf.roofline_fraction:6.1%}")
+    except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-4000:])
+        print(f"[ERR] {arch} {shape} {mesh_name}: {type(e).__name__}: {e}")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def _recurrence_correction(cfg, batch: int, seq: int, phase: str,
+                           train_mult: float = 4.0) -> tuple[float, float]:
+    """Analytic FLOPs/bytes for time-recurrent ops (wkv / ssm scans): their
+    ``lax.scan`` over the sequence is counted once by cost_analysis even in
+    the unrolled accounting variants.  Returns (flops, bytes) to add.
+    Train multiplies by ~4 (fwd + remat-recompute + bwd)."""
+    if not (cfg.rwkv or cfg.hybrid_parallel_ssm):
+        return 0.0, 0.0
+    from repro.core.graph import build_graph
+    g = build_graph(cfg, batch=batch, seq=seq,
+                    phase="train_fwd" if phase == "train" else phase)
+    fl = by = 0.0
+    for op in g.ops:
+        if op.name.endswith(".wkv") or op.name.endswith(".ssm_scan"):
+            fl += op.flops
+            by += op.hbm_bytes + op.act_bytes + op.out_bytes
+    mult = train_mult if phase == "train" else 1.0
+    return fl * mult, by * mult
+
+
+def _score_bytes(cfg, case) -> float:
+    """Analytic HBM bytes of materialized attention score/softmax tensors
+    (what the Pallas flash kernel keeps in VMEM).  fp32 scores, one write +
+    one read each for scores and probs; x4 for train (fwd + remat + bwd)."""
+    from repro.core.graph import build_graph
+    g = build_graph(cfg, batch=case.batch, seq=case.seq,
+                    phase="train_fwd" if case.kind == "train"
+                    else case.kind)
+    total = 0.0
+    for op in g.ops:
+        nm = op.name.rsplit(".", 1)[-1]
+        if nm in ("score", "softmax", "xscore", "xsoftmax"):
+            total += op.out_bytes * 2 * 2.0      # fp32, write+read
+    return total * (4.0 if case.kind == "train" else 1.0)
+
+
+def run_cell_accounting(arch: str, shape: str, mesh_name: str, *,
+                        mode: str = "elk", prefetch_depth: int = 2,
+                        force: bool = False) -> dict:
+    """Roofline accounting for one cell: two reduced-L *unrolled* compiles,
+    linear extrapolation in the block count, grad-accum scaling for train.
+
+    cost_analysis counts a while/scan body once; the production compile is
+    therefore only used for memory fit + schedule, and this accounting pass
+    produces the §Roofline terms."""
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = cell_path(arch, shape, mesh_name, mode).replace(
+        ".json", "__acct.json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+
+    from repro.launch.hlo_analysis import (HBM_BW, LINK_BW, PEAK_FLOPS,
+                                           Roofline, parse_collectives)
+    from repro.models.transformer import block_structure
+    cfg = get_config(arch)
+    case = SHAPES[shape]
+    ok, why = eligible(cfg, shape)
+    rec = {"arch": arch, "shape": shape, "mesh": mesh_name, "mode": mode,
+           "kind": "accounting"}
+    if not ok:
+        rec.update(status="skipped", reason=why)
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+    n_chips = mesh_num_devices(mesh)
+    prefix, period, n_blocks_full = block_structure(cfg)
+
+    is_train = case.kind == "train"
+    dp = 1
+    for a in ("pod", "data"):
+        if a in mesh.shape:
+            dp *= mesh.shape[a]
+    # mirror build_cell's default microbatching exactly
+    ga_full = max(1, case.batch // (dp * 8)) if is_train else 1
+    batch_acct = case.batch // ga_full if is_train else None
+
+    # reduced-L variants: prefix + 1 and + 3 periods (or full if smaller)
+    b1 = min(1, n_blocks_full)
+    b2 = min(3, n_blocks_full)
+    variants = sorted({b1, b2})
+
+    try:
+        totals = []
+        for nb in variants:
+            L = prefix + nb * period
+            cell = build_cell(arch, shape, mesh, mode=mode,
+                              prefetch_depth=prefetch_depth,
+                              num_layers_override=L, unroll=True,
+                              grad_accum=1 if is_train else None,
+                              batch_override=batch_acct)
+            with mesh:
+                compiled = cell.fn.lower(*cell.args).compile()
+            ca = compiled.cost_analysis() or {}
+            colls = parse_collectives(compiled.as_text())
+            totals.append({
+                "n_blocks": nb,
+                "flops": float(ca.get("flops", 0.0)),
+                "bytes": float(ca.get("bytes accessed", 0.0)),
+                "wire": colls.wire_bytes,
+                "counts": colls.counts,
+            })
+
+        def extrap(key: str) -> float:
+            if len(totals) == 1 or totals[0]["n_blocks"] == totals[-1]["n_blocks"]:
+                return totals[-1][key]
+            a, b = totals[0], totals[-1]
+            slope = (b[key] - a[key]) / (b["n_blocks"] - a["n_blocks"])
+            return max(b[key] + slope * (n_blocks_full - b["n_blocks"]), 0.0)
+
+        flops = extrap("flops")
+        byts = extrap("bytes")
+        wire = extrap("wire")
+
+        if is_train:
+            # accounting step = 1 microbatch fwd/bwd + full optimizer;
+            # production = ga x fwd/bwd + optimizer.  Optimizer cost is
+            # estimated analytically and rescaled (per-chip).
+            p_total = cfg.param_count()
+            sdt = 2 if p_total > 1e11 else 4
+            opt_flops = 12.0 * p_total / n_chips
+            opt_bytes = (8.0 + 4.0 * sdt) * p_total / n_chips
+            fb_flops = max(flops - opt_flops, 0.0)
+            fb_bytes = max(byts - opt_bytes, 0.0)
+            flops = ga_full * fb_flops + opt_flops
+            byts = ga_full * fb_bytes + opt_bytes
+            wire = ga_full * wire          # grad reduce happens /microbatch
+
+        # time-recurrence analytic correction (per-chip share)
+        cf, cb = _recurrence_correction(cfg, case.batch, case.seq, case.kind)
+        flops += cf / n_chips
+        byts += cb / n_chips
+
+        # flash-kernel adjustment: the XLA lowering materializes attention
+        # score matrices to HBM; the deployed TPU path streams them through
+        # VMEM (kernels/flash_attention).  Report both terms.
+        flash_save = _score_bytes(cfg, case) / n_chips
+        byts_flash = max(byts - flash_save, 0.0)
+
+        from repro.launch.specs import model_flops
+        rf = Roofline(
+            compute_s=flops / PEAK_FLOPS,
+            memory_s=byts / HBM_BW,
+            collective_s=wire / LINK_BW,
+            hlo_flops_per_chip=flops,
+            hlo_bytes_per_chip=byts,
+            wire_bytes_per_chip=wire,
+            model_flops=model_flops(cfg, case),
+            num_chips=n_chips,
+        )
+        rf_flash = Roofline(
+            compute_s=rf.compute_s, memory_s=byts_flash / HBM_BW,
+            collective_s=rf.collective_s,
+            hlo_flops_per_chip=flops, hlo_bytes_per_chip=byts_flash,
+            wire_bytes_per_chip=wire,
+            model_flops=rf.model_flops, num_chips=n_chips)
+        rec.update(status="ok", roofline=rf.to_dict(),
+                   roofline_flash=rf_flash.to_dict(), variants=totals,
+                   grad_accum=ga_full,
+                   recurrence_correction={"flops": cf, "bytes": cb},
+                   flash_saved_bytes=flash_save)
+        print(f"[acct] {arch:28s} {shape:12s} {mesh_name:6s} "
+              f"dom={rf_flash.dominant:10s} "
+              f"bound={rf_flash.bound_s*1e3:9.3f}ms "
+              f"roofline={rf_flash.roofline_fraction:6.1%} "
+              f"useful={rf.useful_flops_ratio:5.1%}")
+    except Exception as e:  # noqa: BLE001
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-4000:])
+        print(f"[ERR acct] {arch} {shape} {mesh_name}: {e}")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS + ["all"], default="all")
+    ap.add_argument("--shape", choices=list(SHAPES) + ["all"], default="all")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--mode", choices=["elk", "gspmd"], default="elk")
+    ap.add_argument("--prefetch-depth", type=int, default=2)
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="alias for --arch all --shape all --mesh both")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if args.arch == "all" or args.all else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" or args.all else [args.shape]
+    meshes = (["single", "multi"] if args.mesh == "both" or args.all
+              else [args.mesh])
+
+    n_ok = n_skip = n_err = 0
+    for mesh_name in meshes:
+        for arch in archs:
+            for shape in shapes:
+                rec = run_cell(arch, shape, mesh_name, mode=args.mode,
+                               prefetch_depth=args.prefetch_depth,
+                               force=args.force)
+                st = rec.get("status")
+                n_ok += st == "ok"
+                n_skip += st == "skipped"
+                n_err += st == "error"
+    print(f"\ndry-run complete: {n_ok} ok, {n_skip} skipped (documented), "
+          f"{n_err} errors")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

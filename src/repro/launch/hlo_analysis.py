@@ -1,0 +1,188 @@
+"""Post-compile HLO analysis: collective traffic + roofline terms.
+
+``cost_analysis()`` has FLOPs and bytes but no collective volumes, so the
+collective term is parsed from the SPMD-partitioned module text: every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+result shape is converted to per-chip wire bytes with the standard ring
+formulas (group size from ``replica_groups``).
+
+Hardware constants (assignment): TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import Counter
+from typing import Optional
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\(?)((?:[a-z0-9]+\[[0-9,]*\][^)\s]*(?:,\s*)?)+)\)?\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_TILED_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9, ]*)\}")
+_PERMUTE_PAIRS_RE = re.compile(r"source_target_pairs=\{")
+
+
+def _shape_bytes(decl: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(decl):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d.strip():
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_TILED_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip()])
+    return 2
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    """Per-chip collective traffic, ring-model wire bytes."""
+    wire_bytes: float = 0.0          # bytes crossing this chip's links
+    result_bytes: float = 0.0        # raw sum of collective result shapes
+    counts: dict = dataclasses.field(default_factory=dict)
+    by_kind_bytes: dict = dataclasses.field(default_factory=dict)
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    stats = CollectiveStats(counts=Counter(), by_kind_bytes=Counter())
+    seen_starts = set()
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        # avoid double counting async start/done pairs: 'done' lines don't
+        # match (they call the started op), starts counted once
+        decl, kind = m.group(1), m.group(2)
+        b = _shape_bytes(decl)
+        g = _group_size(line)
+        if kind == "all-gather":
+            # result is gathered; each chip sends its 1/g and receives the
+            # rest: wire = result * (g-1)/g
+            wire = b * (g - 1) / g
+        elif kind == "all-reduce":
+            # ring all-reduce = reduce-scatter + all-gather on the shard
+            wire = 2 * b * (g - 1) / g
+        elif kind == "reduce-scatter":
+            # result is the scattered shard; input was g*b
+            wire = b * (g - 1)
+        elif kind == "all-to-all":
+            wire = b * (g - 1) / g
+        else:  # collective-permute
+            wire = b
+        stats.counts[kind] += 1
+        stats.by_kind_bytes[kind] += wire
+        stats.wire_bytes += wire
+        stats.result_bytes += b
+    stats.counts = dict(stats.counts)
+    stats.by_kind_bytes = dict(stats.by_kind_bytes)
+    return stats
+
+
+@dataclasses.dataclass
+class Roofline:
+    """The three §Roofline terms, in seconds (per step)."""
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    hlo_flops_per_chip: float
+    hlo_bytes_per_chip: float
+    wire_bytes_per_chip: float
+    model_flops: float
+    num_chips: int
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / total HLO FLOPs — remat/redundancy waste check."""
+        tot = self.hlo_flops_per_chip * self.num_chips
+        return self.model_flops / tot if tot else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the compute roofline achieved if the step runs at
+        its bound: MODEL_FLOPS / (chips * peak * bound_s)."""
+        denom = self.num_chips * PEAK_FLOPS * self.bound_s
+        return self.model_flops / denom if denom else 0.0
+
+    def to_dict(self) -> dict:
+        return {
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "bound_s": self.bound_s,
+            "hlo_flops_per_chip": self.hlo_flops_per_chip,
+            "hlo_bytes_per_chip": self.hlo_bytes_per_chip,
+            "wire_bytes_per_chip": self.wire_bytes_per_chip,
+            "model_flops": self.model_flops,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "num_chips": self.num_chips,
+        }
+
+
+def roofline_from_compiled(compiled, model_flops: float,
+                           num_chips: int) -> tuple[Roofline, CollectiveStats]:
+    ca = compiled.cost_analysis() or {}
+    flops = float(ca.get("flops", 0.0))            # per-chip (SPMD module)
+    bytes_acc = float(ca.get("bytes accessed", 0.0))
+    colls = parse_collectives(compiled.as_text())
+    rf = Roofline(
+        compute_s=flops / PEAK_FLOPS,
+        memory_s=bytes_acc / HBM_BW,
+        collective_s=colls.wire_bytes / LINK_BW,
+        hlo_flops_per_chip=flops,
+        hlo_bytes_per_chip=bytes_acc,
+        wire_bytes_per_chip=colls.wire_bytes,
+        model_flops=model_flops,
+        num_chips=num_chips,
+    )
+    return rf, colls
+
+
+def memory_summary(compiled) -> dict:
+    ma = compiled.memory_analysis()
+    if ma is None:
+        return {}
+    fields = ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes")
+    out = {f: int(getattr(ma, f, 0)) for f in fields}
+    out["total_hbm_bytes"] = (out["argument_size_in_bytes"]
+                              + out["temp_size_in_bytes"]
+                              + out["output_size_in_bytes"]
+                              - out["alias_size_in_bytes"])
+    return out

@@ -1,0 +1,273 @@
+"""Dry-run cell construction: (arch x shape x mesh) -> lowerable closure.
+
+``input_specs`` provides ShapeDtypeStruct stand-ins for every model input —
+weak-type-correct, shardable, zero device allocation.  ``build_cell``
+returns the jit-able step function plus fully pinned in/out shardings for
+one assignment cell:
+
+* ``train_4k``      lowers ``train_step``   (microbatched fwd+bwd+AdamW)
+* ``prefill_32k``   lowers ``prefill``      (prompt pass filling the cache)
+* ``decode_32k``    lowers ``serve_step``   (one token, 32k KV cache)
+* ``long_500k``     lowers ``serve_step``   (one token, 512k context;
+  sub-quadratic archs only — SWA ring / SSM state keeps it O(window))
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config
+from repro.distributed.sharding import (batch_axes, batch_shardings,
+                                        cache_shardings, param_shardings,
+                                        replicated)
+from repro.models import transformer as tfm
+from repro.models.config import ModelConfig
+from repro.optim import adamw
+
+SDS = jax.ShapeDtypeStruct
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCase:
+    name: str
+    kind: str          # train | prefill | decode
+    seq: int
+    batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeCase("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeCase("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeCase("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeCase("long_500k", "decode", 524_288, 1),
+}
+
+
+def eligible(cfg: ModelConfig, shape: str) -> tuple[bool, str]:
+    if shape == "long_500k" and not cfg.sub_quadratic:
+        return False, ("full attention at 512k context: O(L^2) attention "
+                       "and O(L) bf16 KV exceed any replica HBM budget "
+                       "(assignment rule: run for SSM/hybrid/SWA only)")
+    return True, ""
+
+
+def all_cells() -> list[tuple[str, str]]:
+    return [(a, s) for a in ARCH_IDS for s in SHAPES]
+
+
+# ---------------------------------------------------------------------------
+# ShapeDtypeStruct builders
+# ---------------------------------------------------------------------------
+
+def params_struct(cfg: ModelConfig, decode_positions: int = 0):
+    return jax.eval_shape(
+        lambda: tfm.init_params(jax.random.PRNGKey(0), cfg,
+                                decode_positions=decode_positions))
+
+
+def input_specs(cfg: ModelConfig, case: ShapeCase) -> dict:
+    """Model-input stand-ins for one shape case (tokens/labels or serving
+    tensors), frontend stubs included."""
+    b, s = case.batch, case.seq
+    if case.kind == "train":
+        out = {"tokens": SDS((b, s), jnp.int32),
+               "labels": SDS((b, s), jnp.int32)}
+        if cfg.frontend == "vision_stub":
+            out["embeds"] = SDS((b, cfg.vision_patches, cfg.d_model),
+                                jnp.bfloat16)
+        if cfg.frontend == "audio_stub":
+            out["enc_embeds"] = SDS((b, cfg.encoder_seq, cfg.d_model),
+                                    jnp.bfloat16)
+        return out
+    if case.kind == "prefill":
+        out = {"tokens": SDS((b, s), jnp.int32)}
+        if cfg.frontend == "vision_stub":
+            out["embeds"] = SDS((b, cfg.vision_patches, cfg.d_model),
+                                jnp.bfloat16)
+        if cfg.frontend == "audio_stub":
+            out["enc_embeds"] = SDS((b, cfg.encoder_seq, cfg.d_model),
+                                    jnp.bfloat16)
+        return out
+    return {"token": SDS((b,), jnp.int32)}
+
+
+def cache_capacity(cfg: ModelConfig, case: ShapeCase) -> int:
+    cap = case.seq
+    if cfg.sliding_window and cfg.swa_layers == "all":
+        cap = min(cap, cfg.sliding_window)
+    return cap
+
+
+def cache_struct(cfg: ModelConfig, case: ShapeCase, kv_dtype) -> Any:
+    cap = cache_capacity(cfg, case)
+    return jax.eval_shape(
+        lambda: tfm.init_cache(cfg, tfm.CacheSpec(
+            capacity=cap, batch=case.batch, kv_dtype=kv_dtype)))
+
+
+# ---------------------------------------------------------------------------
+# cell builders
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: str
+    fn: Any                    # jit-ready callable
+    args: tuple                # ShapeDtypeStruct pytrees
+    in_shardings: Any
+    out_shardings: Any
+    meta: dict                 # model_flops, params, notes
+
+
+def _token_sharding(mesh: Mesh, batch: int):
+    bp = batch_axes(mesh)
+    dp = int(np.prod([mesh.shape[a] for a in bp])) if bp else 1
+    return NamedSharding(mesh, P(bp) if batch % max(dp, 1) == 0 else P())
+
+
+def model_flops(cfg: ModelConfig, case: ShapeCase) -> float:
+    """The useful-FLOPs yardstick: 6*N*D train, 2*N_active*D inference."""
+    n = cfg.active_param_count() if cfg.moe_experts else cfg.param_count()
+    if case.kind == "train":
+        return 6.0 * n * case.batch * case.seq
+    if case.kind == "prefill":
+        return 2.0 * n * case.batch * case.seq
+    return 2.0 * n * case.batch          # one token per request
+
+
+HBM_PER_CHIP = 16 * 1024 ** 3
+_RESIDENT_BUDGET = 0.25 * HBM_PER_CHIP    # weights may take 1/4 of HBM
+
+
+def needs_fsdp(cfg: ModelConfig, mesh: Mesh) -> bool:
+    """The ELK §4.3 capacity decision at pod level: weights stay resident
+    (execute state, f=1) when the TP shard fits the budget; otherwise they
+    are held sharded over data (preload state, f=1/k) and gather-ahead
+    streamed.  Regathering weights every microbatch when they *could* be
+    resident is pure waste — the first hillclimb iteration in
+    EXPERIMENTS.md §Perf measures exactly this."""
+    m = mesh.shape.get("model", 1)
+    resident = cfg.param_count() * 2 / m       # bf16 TP shard
+    return resident > _RESIDENT_BUDGET
+
+
+def build_cell(arch: str, shape: str, mesh: Mesh, *,
+               mode: str = "elk", prefetch_depth: int = 2,
+               grad_accum: Optional[int] = None,
+               num_layers_override: Optional[int] = None,
+               batch_override: Optional[int] = None,
+               unroll: bool = False) -> Cell:
+    """mode: 'elk' = the framework defaults realizing the paper's technique
+    (FSDP preload-state weights + gather-ahead streaming); 'gspmd' = plain
+    TP-resident baseline.  The override/unroll knobs build the reduced-L
+    *accounting variants* (XLA cost_analysis counts scan bodies once; the
+    dry-run extrapolates unrolled reduced-L compiles linearly in L)."""
+    cfg = get_config(arch)
+    case = SHAPES[shape]
+    if num_layers_override is not None:
+        cfg = dataclasses.replace(cfg, num_layers=num_layers_override)
+    if unroll:
+        cfg = dataclasses.replace(cfg, unroll_scan=True)
+    if batch_override is not None:
+        case = dataclasses.replace(case, batch=batch_override)
+    ok, why = eligible(cfg, shape)
+    if not ok:
+        raise ValueError(f"cell ({arch},{shape}) ineligible: {why}")
+
+    bp = batch_axes(mesh)
+    dp = int(np.prod([mesh.shape[a] for a in bp])) if bp else 1
+    meta = {"model_flops": model_flops(cfg, case),
+            "params": cfg.param_count(),
+            "active_params": cfg.active_param_count(),
+            "mode": mode, "dp": dp}
+
+    if case.kind == "train":
+        from repro.train.step import jit_train_step  # lazy: heavy imports
+        # default microbatch: 8 sequences per data shard — deep-enough
+        # accumulation for memory without per-microbatch grad-reduce waste
+        ga = grad_accum or max(1, case.batch // (dp * 8))
+        meta["grad_accum"] = ga
+        # bf16 moments for the MoE giants (EXPERIMENTS §Dry-run memory note)
+        sdt = "bfloat16" if cfg.param_count() > 1e11 else "float32"
+        ocfg = adamw.AdamWConfig(state_dtype=sdt)
+        meta["opt_state_dtype"] = sdt
+        p_sds = params_struct(cfg)
+        batch_sds = input_specs(cfg, case)
+        fsdp = mode == "elk" and needs_fsdp(cfg, mesh)
+        # dense models train in the 2D-FSDP layout: TP-16 activation
+        # gathers cost ~30x the compute bound at 1M tokens/step
+        # (EXPERIMENTS.md §Perf); MoE keeps EP-over-model + data-FSDP.
+        layout = "fsdp2d" if (mode == "elk" and not cfg.moe_experts) \
+            else "tp"
+        meta["fsdp"] = fsdp
+        meta["layout"] = layout
+        jitted, sh = jit_train_step(cfg, mesh, ocfg, p_sds, batch_sds,
+                                    grad_accum=ga, compression="none",
+                                    fsdp=fsdp, layout=layout)
+        opt_sds = jax.eval_shape(
+            functools.partial(adamw.init_state, cfg=ocfg), p_sds)
+        args = (p_sds, opt_sds, batch_sds, None)
+        return Cell(arch, shape, jitted, args, None, None, meta)
+
+    kv_dtype = jnp.int8 if shape == "decode_32k" and not cfg.rwkv \
+        else jnp.bfloat16
+    meta["kv_dtype"] = str(jnp.dtype(kv_dtype))
+    dec_pos = case.seq + 8 if cfg.encoder_layers else 0
+    p_sds = params_struct(cfg, decode_positions=dec_pos)
+    fsdp = mode == "elk" and needs_fsdp(cfg, mesh)
+    meta["fsdp"] = fsdp
+    p_sh = param_shardings(p_sds, mesh, fsdp=fsdp)
+    c_sds = cache_struct(cfg, case, kv_dtype)
+    c_sh = cache_shardings(c_sds, mesh)
+
+    if case.kind == "prefill":
+        ins = input_specs(cfg, case)
+
+        def prefill_fn(params, tokens, cache, embeds=None, enc_embeds=None):
+            kw = {}
+            if embeds is not None:
+                kw["embeds"] = embeds
+            if enc_embeds is not None:
+                kw["enc_embeds"] = enc_embeds
+            return tfm.prefill(params, cfg, tokens, cache, mesh=mesh, **kw)
+
+        b_sh = batch_shardings(ins, mesh)
+        v_ax = "model" if cfg.vocab_size % mesh.shape["model"] == 0 else None
+        in_sh = (p_sh, b_sh["tokens"], c_sh,
+                 b_sh.get("embeds"), b_sh.get("enc_embeds"))
+        out_sh = (NamedSharding(mesh, P(bp, None, v_ax)), c_sh)
+        args = (p_sds, ins["tokens"], c_sds, ins.get("embeds"),
+                ins.get("enc_embeds"))
+        fn = jax.jit(prefill_fn, in_shardings=in_sh, out_shardings=out_sh)
+        return Cell(arch, shape, fn, args, in_sh, out_sh, meta)
+
+    # decode / long-context decode; streaming only pays off for weights
+    # too large to stay resident (the same ELK capacity decision)
+    tok_sh = _token_sharding(mesh, case.batch)
+    if mode == "elk" and fsdp:
+        from repro.serve.stream import streaming_decode_step
+
+        def decode_fn(params, token, cache):
+            return streaming_decode_step(params, cfg, token, cache,
+                                         mesh=mesh, prefetch=prefetch_depth)
+    else:
+        def decode_fn(params, token, cache):
+            return tfm.decode_step(params, cfg, token, cache, mesh=mesh)
+
+    v_ax = "model" if cfg.vocab_size % mesh.shape["model"] == 0 else None
+    logit_spec = P(bp, None, v_ax) if case.batch % max(dp, 1) == 0 \
+        else P(None, None, v_ax)
+    in_sh = (p_sh, tok_sh, c_sh)
+    out_sh = (NamedSharding(mesh, logit_spec), c_sh)
+    ins = input_specs(cfg, case)
+    args = (p_sds, ins["token"], c_sds)
+    fn = jax.jit(decode_fn, in_shardings=in_sh, out_shardings=out_sh)
+    return Cell(arch, shape, fn, args, in_sh, out_sh, meta)

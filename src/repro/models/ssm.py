@@ -1,0 +1,76 @@
+"""Mamba-style selective-scan branch (hymba-1.5b's parallel SSM heads).
+
+Simplified but real selective SSM: per channel a state vector of size N with
+data-dependent (dt, B, C):
+
+    h_t = exp(dt_t * A) * h_{t-1} + dt_t * B_t * x_t
+    y_t = C_t . h_t + D * x_t
+
+A is a learned negative-real diagonal (d, N).  Sequence mode scans over time;
+decode carries ``h`` in the serving cache (hymba's O(1)-state half — with the
+SWA attention half this is what makes the arch ``long_500k``-eligible).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.config import ModelConfig
+from repro.models.layers import linear
+
+
+def ssm_scan(x, dt, b_t, c_t, a, d_skip, state):
+    """x: (B,S,d) fp32; dt: (B,S,d); b_t/c_t: (B,S,N); a: (d,N);
+    state: (B,d,N).  Returns (y (B,S,d), final_state)."""
+    da = jnp.exp(dt[..., None] * a)                      # (B,S,d,N)
+    dbx = dt[..., None] * b_t[:, :, None, :] * x[..., None]
+
+    def step(h, xs):
+        da_t, dbx_t, c = xs                              # (B,d,N),(B,d,N),(B,N)
+        h = da_t * h + dbx_t
+        y = jnp.einsum("bdn,bn->bd", h, c)
+        return h, y
+
+    xs = (jnp.moveaxis(da, 1, 0), jnp.moveaxis(dbx, 1, 0),
+          jnp.moveaxis(c_t, 1, 0))
+    state, ys = lax.scan(step, state, xs)
+    y = jnp.moveaxis(ys, 0, 1) + d_skip * x              # (B,S,d)
+    return y, state
+
+
+def ssm_branch(x: jax.Array, p: dict, cfg: ModelConfig,
+               state: jax.Array | None = None):
+    """x: (B,S,d_model) -> (out, new_state (B,d,N))."""
+    b, s, d = x.shape
+    n = cfg.ssm_state
+    xz = linear(x, p["w_in"])                            # (B,S,2d)
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xi = xi.astype(jnp.float32)
+    dt = jax.nn.softplus(linear(xi, p["w_dt"].astype(jnp.float32))
+                         + p["dt_bias"].astype(jnp.float32))
+    bc = linear(xi, p["w_bc"].astype(jnp.float32))       # (B,S,2N)
+    b_t, c_t = jnp.split(bc, 2, axis=-1)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))         # (d,N) negative-real
+    if state is None:
+        state = jnp.zeros((b, d, n), jnp.float32)
+    y, new_state = ssm_scan(xi, dt, b_t, c_t, a, p["d_skip"].astype(jnp.float32),
+                            state)
+    out = linear(y.astype(x.dtype) * jax.nn.silu(z), p["w_out"])
+    return out, new_state
+
+
+def ssm_params(rng, cfg: ModelConfig, dtype) -> dict:
+    d, n = cfg.d_model, cfg.ssm_state
+    ks = jax.random.split(rng, 4)
+    s = d ** -0.5
+    return {
+        "w_in": jax.random.normal(ks[0], (d, 2 * d), dtype) * s,
+        "w_dt": jax.random.normal(ks[1], (d, d), dtype) * s * 0.1,
+        "dt_bias": jnp.full((d,), -4.0, dtype),   # softplus ~= 0.018
+        "w_bc": jax.random.normal(ks[2], (d, 2 * n), dtype) * s,
+        "a_log": jnp.zeros((d, n), dtype),        # A = -1
+        "d_skip": jnp.ones((d,), dtype),
+        "w_out": jax.random.normal(ks[3], (d, d), dtype) * s,
+    }

@@ -1,0 +1,118 @@
+"""AdamW + schedules, pure JAX, sharding-aware.
+
+* first/second moments can be held in bf16 (``state_dtype``) — the
+  distributed-optimization trick that lets the 1T-param kimi-k2 config fit
+  512 x 16GB chips (EXPERIMENTS.md §Dry-run discusses the budget).
+* ``state_shardings`` mirrors the parameter shardings so ZeRO-1 placement
+  (moments sharded over data+model) falls out of the param rules.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    state_dtype: str = "float32"      # "bfloat16" halves optimizer memory
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+def cosine_schedule(cfg: AdamWConfig) -> Callable[[jax.Array], jax.Array]:
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = cfg.lr * step / max(cfg.warmup_steps, 1)
+        t = jnp.clip((step - cfg.warmup_steps)
+                     / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+        cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (
+            1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < cfg.warmup_steps, warm, cfg.lr * cos)
+    return lr
+
+
+def init_state(params: PyTree, cfg: AdamWConfig) -> dict:
+    dt = jnp.dtype(cfg.state_dtype)
+    zeros = lambda p: jnp.zeros(jnp.shape(p), dt)
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+    }
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in leaves))
+
+
+def apply_update(params: PyTree, grads: PyTree, state: dict,
+                 cfg: AdamWConfig) -> tuple[PyTree, dict, dict]:
+    """One AdamW step.  Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    lr = cosine_schedule(cfg)(step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12)) \
+        if cfg.grad_clip else 1.0
+
+    b1, b2 = cfg.b1, cfg.b2
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+    sdt = jnp.dtype(cfg.state_dtype)
+
+    def upd_block(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g
+        v32 = b2 * v.astype(jnp.float32) + (1 - b2) * g * g
+        mh = m32 / c1
+        vh = v32 / c2
+        delta = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay \
+            * p.astype(jnp.float32)
+        newp = p.astype(jnp.float32) - lr * delta
+        return newp.astype(p.dtype), m32.astype(sdt), v32.astype(sdt)
+
+    def upd(p, g, m, v):
+        # trillion-param stacked leaves: chunk the elementwise update over
+        # the stacked-blocks axis so the fp32 temporaries stay one block
+        # wide (kimi-k2's expert leaves are ~5 GiB/device in fp32)
+        if p.ndim >= 3 and p.size * 4 > (1 << 28):
+            return jax.lax.map(lambda t: upd_block(*t), (p, g, m, v))
+        return upd_block(p, g, m, v)
+
+    out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+    is3 = lambda x: isinstance(x, tuple) and len(x) == 3 and not isinstance(
+        x[0], tuple)
+    newp = jax.tree.map(lambda t: t[0], out, is_leaf=is3)
+    newm = jax.tree.map(lambda t: t[1], out, is_leaf=is3)
+    newv = jax.tree.map(lambda t: t[2], out, is_leaf=is3)
+    new_state = {"step": step, "m": newm, "v": newv}
+    return newp, new_state, {"grad_norm": gnorm, "lr": lr}
+
+
+def state_shardings(state: dict, param_shardings: PyTree, mesh,
+                    params: PyTree = None) -> dict:
+    """ZeRO-1: moments always take the FSDP placement (sharded over data
+    *and* model) regardless of how the live params are held — they are only
+    touched at the update, so their gathers happen once per step, not per
+    microbatch.  The step counter is replicated."""
+    from repro.distributed.sharding import param_shardings as psh, replicated
+    moments = (psh(params, mesh, fsdp=True) if params is not None
+               else param_shardings)
+    return {
+        "step": replicated(mesh),
+        "m": moments,
+        "v": moments,
+    }

@@ -1,0 +1,114 @@
+"""Batched serving engine: prefill + decode with sharded KV caches.
+
+Two execution modes:
+
+* ``gspmd``      — weights resident replicated-over-data / TP-sharded;
+  XLA schedules all collectives (the `Basic`-like baseline at pod level).
+* ``elk_stream`` — weights resident *sharded over data* (ELK preload
+  state, 1/k per device) with the gather-ahead window of
+  ``serve/stream.py``; prefetch depth comes from the ELK scheduler via
+  ``core/integration.pod_plan``.  This is what lets a model k-times larger
+  than one replica's HBM serve from the pod, at the cost of ICI traffic —
+  the paper's capacity/IO/communication trade, live.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.distributed.sharding import (batch_axes, batch_shardings,
+                                        cache_shardings, param_shardings,
+                                        replicated)
+from repro.models import transformer as tfm
+from repro.models.config import ModelConfig
+from repro.models.frontends import frontend_embeddings
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    batch: int
+    cache_capacity: int
+    mode: str = "gspmd"               # gspmd | elk_stream
+    prefetch_depth: int = 2           # ELK preload number (elk_stream)
+    kv_dtype: str = "bfloat16"        # bfloat16 | int8
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, mesh, params: PyTree,
+                 scfg: ServeConfig):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.scfg = scfg
+        fsdp = scfg.mode == "elk_stream"
+        self.p_sh = param_shardings(params, mesh, fsdp=fsdp)
+        self.params = jax.device_put(params, self.p_sh)
+
+        cache = tfm.init_cache(cfg, tfm.CacheSpec(
+            capacity=scfg.cache_capacity, batch=scfg.batch,
+            kv_dtype=jnp.dtype(scfg.kv_dtype)))
+        self.c_sh = cache_shardings(cache, mesh)
+        self.cache0 = jax.device_put(cache, self.c_sh)
+
+        bp = batch_axes(mesh)
+        tok_sh = NamedSharding(mesh, P(bp))
+        logit_sh = NamedSharding(mesh, P(bp, None, "model"))
+
+        if scfg.mode == "elk_stream":
+            from repro.serve.stream import streaming_decode_step
+
+            def decode(params, token, cache):
+                return streaming_decode_step(params, cfg, token, cache,
+                                             mesh=mesh,
+                                             prefetch=scfg.prefetch_depth)
+        else:
+            def decode(params, token, cache):
+                return tfm.decode_step(params, cfg, token, cache)
+
+        self._decode = jax.jit(
+            decode,
+            in_shardings=(self.p_sh, tok_sh, self.c_sh),
+            out_shardings=(logit_sh, self.c_sh),
+        )
+
+        def prefill(params, tokens, cache, embeds=None, enc_embeds=None):
+            kw = {}
+            if embeds is not None:
+                kw["embeds"] = embeds
+            if enc_embeds is not None:
+                kw["enc_embeds"] = enc_embeds
+            return tfm.prefill(params, cfg, tokens, cache, **kw)
+
+        self._prefill = jax.jit(prefill)
+
+    # -- public API --------------------------------------------------------
+    def prefill(self, tokens: jax.Array, cache: Optional[dict] = None,
+                **frontends) -> tuple[jax.Array, dict]:
+        cache = cache if cache is not None else self.cache0
+        return self._prefill(self.params, tokens, cache,
+                             frontends.get("embeds"),
+                             frontends.get("enc_embeds"))
+
+    def decode(self, token: jax.Array, cache: dict
+               ) -> tuple[jax.Array, dict]:
+        return self._decode(self.params, token, cache)
+
+    def generate(self, prompts: jax.Array, steps: int,
+                 greedy: bool = True) -> jax.Array:
+        """prompts: (B, S0) -> (B, S0 + steps) greedy continuation."""
+        fe = frontend_embeddings(self.cfg, prompts.shape[0])
+        logits, cache = self.prefill(prompts, **fe)
+        tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        out = [prompts, tok[:, None]]
+        for _ in range(steps - 1):
+            logits, cache = self.decode(tok, cache)
+            tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+            out.append(tok[:, None])
+        return jnp.concatenate(out, axis=1)

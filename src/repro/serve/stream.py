@@ -1,0 +1,174 @@
+"""ELK weight-streaming decoder — the paper's technique at pod level.
+
+Mapping (DESIGN.md §3A): layer weights live *sharded over the data axis*
+(preload state, each device holds 1/k); before a layer executes its weights
+are all-gathered to replicated-over-data (execute state).  The gather of
+block ``i + p`` is issued while block ``i`` computes — ``p`` is the paper's
+*preload number*, chosen by the ELK scheduler
+(``core/integration.pod_plan``), and the rolling window of ``p`` gathered
+blocks is the *preload space* (the on-chip memory capacity contention ① is
+now an HBM capacity contention; the ICI contention between these gathers
+and TP collectives is contention ②).
+
+Mechanically: a ``lax.scan`` whose carry holds the ``p`` gathered blocks;
+``with_sharding_constraint`` forces the preload->execute transition, and
+XLA's latency-hiding scheduler overlaps the gather with the previous
+block's compute because they have no data dependency.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed.sharding import _path_str, param_pspec
+from repro.models import transformer as tfm
+from repro.models.config import ModelConfig
+
+PyTree = Any
+
+
+def _drop_axis(spec: P, axis: str) -> P:
+    return P(*[(None if ax == axis else ax) for ax in spec])
+
+
+def execute_state_shardings(params_blocks, mesh: Mesh) -> PyTree:
+    """Sharding of one *gathered* block (preload state minus the data axis
+    and the stacked leading dim)."""
+    def one(path, leaf):
+        spec = param_pspec("blocks/" + _path_str(path), jnp.shape(leaf),
+                           mesh, fsdp=True)
+        spec = _drop_axis(spec, "data")
+        return NamedSharding(mesh, P(*spec[1:]))   # drop stacked dim
+    return jax.tree_util.tree_map_with_path(one, params_blocks)
+
+
+def _index_block(params_blocks, i):
+    return jax.tree.map(
+        lambda a: lax.dynamic_index_in_dim(a, i, 0, keepdims=False),
+        params_blocks)
+
+
+def _gather(params_blocks, i, exec_shardings):
+    blk = _index_block(params_blocks, i)
+    return jax.tree.map(lax.with_sharding_constraint, blk, exec_shardings)
+
+
+def streaming_decoder(params, cfg: ModelConfig, x, ctx, cache,
+                      mesh: Mesh, prefetch: int = 2):
+    """Drop-in replacement for ``transformer._run_decoder`` that streams
+    block weights with an ELK gather-ahead window of depth ``prefetch``.
+
+    Returns (x, new_cache_layers) with the same contract."""
+    prefix, period, n_blocks = tfm.block_structure(cfg)
+    kinds = tfm.layer_kinds(cfg)
+    spec = tfm.attn_spec(cfg)
+    new_layers: list[Optional[dict]] = [None] * cfg.num_layers
+
+    for li in range(prefix):
+        lc = _cache_slice(cache, li)
+        x, nc = tfm._decoder_layer(x, params["prefix"][li], cfg, kinds[li],
+                                   spec, ctx, lc)
+        new_layers[li] = nc
+    if not n_blocks:
+        return x, new_layers
+
+    pblocks = tuple(params["blocks"])
+    exec_sh = execute_state_shardings(pblocks, mesh)
+    p = max(1, min(prefetch, n_blocks))
+
+    # preload window: blocks 0..p-1 gathered up front (the paper's initial
+    # pipeline fill)
+    window = [_gather(pblocks, jnp.int32(i), exec_sh) for i in range(p)]
+    window = jax.tree.map(lambda *xs: jnp.stack(xs), *window)
+
+    xs_cache = _stack_cache(cache, cfg) if cache is not None else None
+
+    def body(carry, step_xs):
+        x, win = carry
+        i, bcache = step_xs
+        cur = jax.tree.map(lambda a: a[0], win)
+        outs = []
+        for slot in range(period):
+            kind = kinds[prefix + slot]
+            lc = (jax.tree.map(lambda a: a[slot], bcache)
+                  if bcache is not None else None)
+            x, nc = tfm._decoder_layer(x, cur[slot], cfg, kind, spec,
+                                       ctx, lc)
+            outs.append(nc)
+        # issue the gather of block i+p (clamped; tail gathers are no-ops
+        # on already-resident data)
+        nxt = _gather(pblocks, jnp.minimum(i + p, n_blocks - 1), exec_sh)
+        win = jax.tree.map(
+            lambda a, n: jnp.concatenate([a[1:], n[None]], axis=0),
+            win, nxt)
+        ys = (jax.tree.map(lambda *zs: jnp.stack(zs), *outs)
+              if outs[0] else None)
+        return (x, win), ys
+
+    idxs = jnp.arange(n_blocks, dtype=jnp.int32)
+    (x, _), ys = lax.scan(body, (x, window), (idxs, xs_cache))
+    if ys is not None:
+        flat = jax.tree.map(
+            lambda a: a.reshape((n_blocks * period,) + a.shape[2:]), ys)
+        for off in range(n_blocks * period):
+            new_layers[prefix + off] = jax.tree.map(lambda a: a[off], flat)
+    return x, new_layers
+
+
+def _cache_slice(cache, li):
+    if cache is None:
+        return None
+    out = {}
+    for key in ("k", "v", "rwkv_state", "ssm_state"):
+        if key in cache:
+            out[key] = cache[key][li]
+    if "k_scale" in cache:
+        out["scales"] = (cache["k_scale"][li], cache["v_scale"][li])
+    return out
+
+
+def _stack_cache(cache, cfg: ModelConfig):
+    prefix, period, n_blocks = tfm.block_structure(cfg)
+
+    def stack(arr):
+        body = arr[prefix:prefix + n_blocks * period]
+        return body.reshape((n_blocks, period) + arr.shape[1:])
+
+    out = {}
+    for key in ("k", "v", "rwkv_state", "ssm_state"):
+        if key in cache:
+            out[key] = stack(cache[key])
+    if "k_scale" in cache:
+        out["scales"] = (stack(cache["k_scale"]), stack(cache["v_scale"]))
+    return out
+
+
+def streaming_decode_step(params, cfg: ModelConfig, token, cache,
+                          mesh: Mesh, prefetch: int = 2):
+    """ELK-streaming version of ``transformer.decode_step``.
+
+    Enc-dec models fall back to the plain decode path: their decoders are
+    tiny (whisper-tiny: 37M) and cross-attention K/V lives in the cache —
+    nothing worth streaming."""
+    if cfg.encoder_layers:
+        return tfm.decode_step(params, cfg, token, cache)
+    x = jnp.take(params["embed"], token[:, None], axis=0)
+    if cfg.scale_embed:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    pos = cache["pos"]
+    slot_pos = None
+    if "slot_pos" in cache:
+        c = cache["slot_pos"].shape[0]
+        slot_pos = cache["slot_pos"].at[pos % c].set(pos)
+    ctx = {"mode": "decode", "pos": pos, "slot_pos": slot_pos,
+           "enc_out": None, "mesh": mesh}
+    x, new_layers = streaming_decoder(params, cfg, x, ctx, cache, mesh,
+                                      prefetch)
+    new_cache = tfm._merge_cache(cfg, cache, new_layers, pos + 1, slot_pos)
+    return tfm._logits(params, cfg, x), new_cache

@@ -1,0 +1,167 @@
+"""The jit'd training step: microbatched grad accumulation + AdamW.
+
+Structure (per the large-scale runnability requirements):
+
+* **microbatching** — the global batch is split into ``grad_accum``
+  microbatches processed under ``lax.scan``; only one microbatch's
+  activations/logits are ever live (the full-batch logits of a 150k-vocab
+  model would be TBs).
+* **sharding** — params per ``distributed.sharding`` rules (TP/EP; FSDP
+  optional), batch over (pod, data), optimizer state inherits param
+  placement (ZeRO-1 via the FSDP rule).
+* **gradient compression** — cross-pod traffic optionally bf16 or
+  error-feedback int8 (``distributed.compression``); the error-feedback
+  buffer threads through the step signature.
+* **overlap** — gradients are computed per-microbatch and accumulated;
+  XLA's latency-hiding scheduler overlaps the reduce of microbatch ``i``
+  with the backward of ``i+1`` (the scan body keeps them independent).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import compression as comp
+from repro.distributed.sharding import (batch_shardings, constrain_batch,
+                                        param_shardings, replicated)
+from repro.models import transformer as tfm
+from repro.models.config import ModelConfig
+from repro.optim import adamw
+
+PyTree = Any
+
+
+def make_loss_fn(cfg: ModelConfig, mesh, layout: str = "tp"):
+    def loss_fn(params, batch):
+        batch = {k: (constrain_batch(v, mesh) if hasattr(v, "ndim")
+                     and v.ndim >= 1 else v) for k, v in batch.items()}
+        return tfm.loss_fn(params, cfg, batch, remat=True, mesh=mesh,
+                           layout=layout)
+    return loss_fn
+
+
+def make_train_step(cfg: ModelConfig, mesh, opt_cfg: adamw.AdamWConfig,
+                    grad_accum: int = 1, compression: str = "none",
+                    fsdp: bool = False, accum_dtype=None,
+                    zero_shardings=None, param_out_shardings=None,
+                    layout: str = "tp"):
+    """Returns (step_fn, shardings) where step_fn(params, opt_state, batch,
+    err_fb) -> (params, opt_state, metrics, err_fb) is ready for jit.
+
+    ZeRO-1 structure: gradients are accumulated and the AdamW update runs
+    entirely in the *ZeRO domain* (``zero_shardings`` — params sharded over
+    data and model), where moments live; the updated params are gathered
+    back to their live placement (``param_out_shardings``) once per step.
+    Mixing placements inside the update would make XLA reshard the full
+    fp32 moments instead.
+
+    ``accum_dtype`` sets the gradient-accumulation buffer dtype: fp32 by
+    default; bf16 halves the largest transient for trillion-param models
+    (kimi-k2) — with 8-16 microbatches the bf16 accumulation error is well
+    under Adam's own epsilon floor."""
+    loss_fn = make_loss_fn(cfg, mesh, layout)
+    acc_dt = accum_dtype or (jnp.bfloat16 if cfg.param_count() > 1e11
+                             else jnp.float32)
+
+    def to_zero(tree):
+        if zero_shardings is None:
+            return tree
+        return jax.tree.map(jax.lax.with_sharding_constraint, tree,
+                            zero_shardings)
+
+    def to_live(tree):
+        if param_out_shardings is None:
+            return tree
+        return jax.tree.map(jax.lax.with_sharding_constraint, tree,
+                            param_out_shardings)
+
+    def split_micro(batch):
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.distributed.sharding import batch_axes
+        bp = batch_axes(mesh)
+
+        def f(x):
+            b = x.shape[0]
+            assert b % grad_accum == 0, (b, grad_accum)
+            out = x.reshape((grad_accum, b // grad_accum) + x.shape[1:])
+            # keep the batch sharding on the *microbatch* dim — GSPMD would
+            # otherwise move it to the scan dim, replicating every
+            # microbatch across the data axis (16x live activations)
+            return jax.lax.with_sharding_constraint(
+                out, NamedSharding(
+                    mesh, P(None, bp, *([None] * (out.ndim - 2)))))
+        return jax.tree.map(f, batch)
+
+    def train_step(params, opt_state, batch, err_fb):
+        if grad_accum > 1:
+            micro = split_micro(batch)
+
+            def accum(carry, mb):
+                gsum, lsum = carry
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                # accumulate in the ZeRO domain: the add's output sharding
+                # makes XLA keep only the local grad shard per microbatch
+                gsum = to_zero(jax.tree.map(
+                    lambda a, b: a + b.astype(a.dtype), gsum, g))
+                return (gsum, lsum + l), None
+
+            zeros = to_zero(jax.tree.map(
+                lambda p: jnp.zeros(p.shape, acc_dt), params))
+            (gsum, lsum), _ = jax.lax.scan(accum, (zeros, 0.0), micro)
+            grads = jax.tree.map(lambda g: g / grad_accum, gsum)
+            loss = lsum / grad_accum
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            grads = to_zero(grads)
+
+        grads, err_fb = comp.compress_grads(grads, err_fb, compression)
+        new_p, opt_state, metrics = adamw.apply_update(
+            to_zero(params), grads, opt_state, opt_cfg)
+        params = to_live(new_p)      # one all-gather per step
+        metrics["loss"] = loss
+        return params, opt_state, metrics, err_fb
+
+    return train_step
+
+
+def jit_train_step(cfg: ModelConfig, mesh, opt_cfg: adamw.AdamWConfig,
+                   params_like: PyTree, batch_like: PyTree,
+                   grad_accum: int = 1, compression: str = "none",
+                   fsdp: bool = False, layout: str = "tp"):
+    """Build the fully-specified jit: in/out shardings pinned so the dry-run
+    and the trainer share one lowering path.
+
+    ``layout='fsdp2d'`` holds params fully sharded over (data x model) —
+    they are already in the ZeRO domain, so to_zero/to_live are no-ops and
+    the only per-step weight traffic is the per-layer forward/backward
+    gathers (constant in batch size)."""
+    p_sh = param_shardings(params_like, mesh, fsdp=fsdp, layout=layout)
+    zero_sh = (p_sh if layout == "fsdp2d"
+               else param_shardings(params_like, mesh, fsdp=True))
+    # eval_shape: params_like may be ShapeDtypeStructs (the dry-run path)
+    opt_state_like = jax.eval_shape(
+        functools.partial(adamw.init_state, cfg=opt_cfg), params_like)
+    s_sh = (adamw.state_shardings(opt_state_like, p_sh, mesh,
+                                  params=params_like)
+            if layout != "fsdp2d" else
+            {"step": replicated(mesh), "m": p_sh, "v": p_sh})
+    b_sh = batch_shardings(batch_like, mesh)
+    # error-feedback buffer mirrors the ZeRO placement (param-shaped)
+    e_sh = zero_sh if compression == "int8" else None
+
+    step = make_train_step(cfg, mesh, opt_cfg, grad_accum, compression,
+                           fsdp, zero_shardings=zero_sh,
+                           param_out_shardings=p_sh, layout=layout)
+    metrics_sh = {"loss": replicated(mesh), "grad_norm": replicated(mesh),
+                  "lr": replicated(mesh)}
+    jitted = jax.jit(
+        step,
+        in_shardings=(p_sh, s_sh, b_sh, e_sh),
+        out_shardings=(p_sh, s_sh, metrics_sh, e_sh),
+        donate_argnums=(0, 1),
+    )
+    return jitted, {"params": p_sh, "opt": s_sh, "batch": b_sh, "err": e_sh}

@@ -1,0 +1,151 @@
+"""Fault-tolerant training loop.
+
+Production contract for thousand-node fleets:
+
+* **checkpoint/restart** — async atomic checkpoints every
+  ``ckpt_every`` steps; on construction the trainer restores the latest
+  checkpoint if one exists (a restarted job resumes transparently; the
+  deterministic data pipeline replays from the step counter).
+* **heartbeat** — a per-step heartbeat file (step + walltime); an external
+  supervisor (or the pod scheduler) detects dead workers by staleness.
+* **straggler mitigation** — per-step deadline tracking: steps slower than
+  ``straggler_factor`` x the rolling median are logged and counted; after
+  ``straggler_patience`` consecutive slow steps the trainer invokes
+  ``on_straggler`` (default: checkpoint immediately so the scheduler can
+  reslice the job — on real fleets this is where you'd trigger hot-spare
+  swap-in).
+* **failure injection** — ``failure_hook(step)`` raising mid-run is the
+  crash; tests assert a fresh Trainer resumes losslessly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from statistics import median
+from typing import Callable, Optional
+
+import jax
+
+from repro.checkpoint.store import CheckpointStore
+from repro.data.pipeline import DataConfig, make_dataset
+from repro.distributed import compression as comp
+from repro.models import transformer as tfm
+from repro.models.config import ModelConfig
+from repro.optim import adamw
+from repro.train.step import jit_train_step
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    workdir: str
+    total_steps: int = 100
+    ckpt_every: int = 20
+    keep_ckpts: int = 3
+    grad_accum: int = 1
+    compression: str = "none"
+    fsdp: bool = False
+    straggler_factor: float = 3.0
+    straggler_patience: int = 3
+    heartbeat_file: str = "heartbeat.json"
+    seed: int = 0
+
+
+class Trainer:
+    def __init__(self, model_cfg: ModelConfig, data_cfg: DataConfig,
+                 opt_cfg: adamw.AdamWConfig, tcfg: TrainerConfig, mesh,
+                 failure_hook: Optional[Callable[[int], None]] = None,
+                 on_straggler: Optional[Callable[["Trainer"], None]] = None):
+        self.cfg = model_cfg
+        self.tcfg = tcfg
+        self.mesh = mesh
+        self.opt_cfg = opt_cfg
+        self.data = make_dataset(data_cfg, model_cfg)
+        self.store = CheckpointStore(os.path.join(tcfg.workdir, "ckpt"),
+                                     keep=tcfg.keep_ckpts)
+        self.failure_hook = failure_hook
+        self.on_straggler = on_straggler or (lambda t: t.checkpoint())
+        self.step_times: list[float] = []
+        self.straggler_strikes = 0
+        self.straggler_events = 0
+        self.metrics_log: list[dict] = []
+
+        params = tfm.init_params(jax.random.PRNGKey(tcfg.seed), model_cfg)
+        opt_state = adamw.init_state(params, opt_cfg)
+        batch0 = self.data.batch_at(0)
+        self.step_fn, self.shardings = jit_train_step(
+            model_cfg, mesh, opt_cfg, params, batch0,
+            grad_accum=tcfg.grad_accum, compression=tcfg.compression,
+            fsdp=tcfg.fsdp)
+        self.err_fb = comp.init_error_feedback(params, tcfg.compression)
+
+        # restore-or-init (elastic: shardings belong to *this* mesh, the
+        # checkpoint may have been written on another)
+        latest = self.store.latest_step()
+        if latest is not None:
+            state = {"params": params, "opt": opt_state}
+            state = self.store.restore(
+                latest, state, {"params": self.shardings["params"],
+                                "opt": self.shardings["opt"]})
+            params, opt_state = state["params"], state["opt"]
+            self.step = latest
+        else:
+            params = jax.device_put(params, self.shardings["params"])
+            opt_state = jax.device_put(opt_state, self.shardings["opt"])
+            self.step = 0
+        self.params, self.opt_state = params, opt_state
+
+    # -- fault-tolerance plumbing -----------------------------------------
+    def _heartbeat(self, step: int, step_time: float) -> None:
+        path = os.path.join(self.tcfg.workdir, self.tcfg.heartbeat_file)
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump({"step": step, "time": time.time(),
+                       "step_time": step_time}, f)
+        os.replace(tmp, path)
+
+    def _check_straggler(self, dt: float) -> None:
+        self.step_times.append(dt)
+        window = self.step_times[-32:]
+        if len(window) < 5:
+            return
+        med = median(window[:-1])
+        if dt > self.tcfg.straggler_factor * med:
+            self.straggler_strikes += 1
+            if self.straggler_strikes >= self.tcfg.straggler_patience:
+                self.straggler_events += 1
+                self.straggler_strikes = 0
+                self.on_straggler(self)
+        else:
+            self.straggler_strikes = 0
+
+    def checkpoint(self) -> None:
+        self.store.save_async(self.step, {"params": self.params,
+                                          "opt": self.opt_state})
+
+    # -- main loop ----------------------------------------------------------
+    def run(self, steps: Optional[int] = None) -> list[dict]:
+        end = self.step + steps if steps is not None else self.tcfg.total_steps
+        while self.step < end:
+            if self.failure_hook is not None:
+                self.failure_hook(self.step)
+            batch = self.data.batch_at(self.step)
+            t0 = time.perf_counter()
+            out = self.step_fn(self.params, self.opt_state, batch,
+                               self.err_fb)
+            self.params, self.opt_state, metrics, self.err_fb = out
+            jax.block_until_ready(metrics["loss"])
+            dt = time.perf_counter() - t0
+            self.step += 1
+            m = {k: float(v) for k, v in metrics.items()}
+            m["step"] = self.step
+            m["step_time"] = dt
+            self.metrics_log.append(m)
+            self._heartbeat(self.step, dt)
+            self._check_straggler(dt)
+            if self.step % self.tcfg.ckpt_every == 0:
+                self.checkpoint()
+        self.store.wait()
+        return self.metrics_log

@@ -1,0 +1,15 @@
+"""Shared fixtures.  NOTE: never import repro.launch.dryrun here — it
+forces 512 host devices; smoke tests must see the real (1-device) CPU."""
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def mesh11():
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,134 @@
+"""Per-arch smoke tests (assignment requirement) + model invariants."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_IDS, PAPER_MODEL_IDS, get_config, \
+    get_smoke_config
+from repro.models import transformer as T
+from repro.models.frontends import frontend_embeddings
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_and_train_step(arch, rng):
+    """Reduced same-family config: one forward + one train step on CPU,
+    output shapes verified, no NaNs (the assignment's per-arch smoke)."""
+    cfg = get_smoke_config(arch)
+    params = T.init_params(rng, cfg)
+    B, S = 2, 16
+    tokens = jax.random.randint(rng, (B, S), 0, cfg.vocab_size)
+    batch = {"tokens": tokens, "labels": tokens}
+    batch.update(frontend_embeddings(cfg, B))
+
+    logits = T.forward_train(params, cfg, tokens, remat=False,
+                             **frontend_embeddings(cfg, B))
+    exp_s = S + (cfg.vision_patches if cfg.frontend == "vision_stub" else 0)
+    assert logits.shape == (B, exp_s, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+
+    loss, grads = jax.value_and_grad(
+        lambda p: T.loss_fn(p, cfg, batch, remat=False))(params)
+    assert bool(jnp.isfinite(loss))
+    gn = sum(float(jnp.sum(jnp.abs(g.astype(jnp.float32))))
+             for g in jax.tree.leaves(grads))
+    assert gn > 0, "gradients all zero"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_matches_forward(arch, rng):
+    """prefill(S-1) + decode(1) last-token logits == forward(S) last-token
+    logits — the serving-correctness invariant (MoE: dropless capacity)."""
+    cfg = get_smoke_config(arch)
+    if cfg.moe_experts:
+        cfg = dataclasses.replace(cfg,
+                                  moe_capacity_factor=float(cfg.moe_experts))
+    params = T.init_params(rng, cfg)
+    B, S = 2, 12
+    tokens = jax.random.randint(rng, (B, S), 0, cfg.vocab_size)
+    fe = frontend_embeddings(cfg, B)
+    full = T.forward_train(params, cfg, tokens, remat=False, **fe)
+    cache = T.init_cache(cfg, T.CacheSpec(capacity=S + 4, batch=B))
+    _, cache = T.prefill(params, cfg, tokens[:, :S - 1], cache, **fe)
+    ld, _ = T.decode_step(params, cfg, tokens[:, S - 1], cache)
+    err = float(jnp.max(jnp.abs(full[:, -1].astype(jnp.float32)
+                                - ld[:, 0].astype(jnp.float32))))
+    scale = float(jnp.max(jnp.abs(full[:, -1]))) + 1e-9
+    assert err / scale < 0.02, f"{arch}: decode diverges from forward"
+
+
+def test_swa_ring_buffer_eviction(rng):
+    """Sliding-window arch with cache capacity == window: decoding past the
+    window stays finite and attends only within the window."""
+    cfg = get_smoke_config("h2o_danube_1_8b")   # window 16 after shrink
+    params = T.init_params(rng, cfg)
+    B = 2
+    W = cfg.sliding_window
+    cache = T.init_cache(cfg, T.CacheSpec(capacity=W, batch=B))
+    toks = jax.random.randint(rng, (B, 3 * W), 0, cfg.vocab_size)
+    _, cache = T.prefill(params, cfg, toks[:, :W], cache)
+    for t in range(W, 3 * W):
+        logits, cache = T.decode_step(params, cfg, toks[:, t], cache)
+        assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+    assert int(cache["pos"]) == 3 * W
+
+
+def test_unroll_scan_equivalence(rng):
+    """unroll_scan (accounting variants) is numerically identical."""
+    cfg = get_smoke_config("qwen3_14b")
+    params = T.init_params(rng, cfg)
+    tokens = jax.random.randint(rng, (2, 16), 0, cfg.vocab_size)
+    batch = {"tokens": tokens, "labels": tokens}
+    l1 = T.loss_fn(params, cfg, batch, remat=False)
+    cfg_u = dataclasses.replace(cfg, unroll_scan=True, attn_chunk=8)
+    l2 = T.loss_fn(params, cfg_u, batch, remat=False)
+    assert abs(float(l1) - float(l2)) < 5e-3
+
+
+def test_int8_kv_cache_close_to_bf16(rng):
+    cfg = get_smoke_config("qwen3_14b")
+    params = T.init_params(rng, cfg)
+    B, S = 2, 10
+    tokens = jax.random.randint(rng, (B, S), 0, cfg.vocab_size)
+    outs = {}
+    for dt in (jnp.bfloat16, jnp.int8):
+        cache = T.init_cache(cfg, T.CacheSpec(capacity=16, batch=B,
+                                              kv_dtype=dt))
+        _, cache = T.prefill(params, cfg, tokens[:, :S - 1], cache)
+        ld, _ = T.decode_step(params, cfg, tokens[:, S - 1], cache)
+        outs[str(dt)] = ld
+    a = outs["<class 'jax.numpy.bfloat16'>"].astype(jnp.float32)
+    b = outs["<class 'jax.numpy.int8'>"].astype(jnp.float32)
+    rel = float(jnp.max(jnp.abs(a - b))) / (float(jnp.max(jnp.abs(a)))
+                                            + 1e-9)
+    assert rel < 0.15, f"int8 KV cache too lossy: {rel}"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS + PAPER_MODEL_IDS)
+def test_full_config_param_counts(arch):
+    """Full configs instantiate structurally (eval_shape, no allocation)
+    and parameter counts are in the advertised ballpark."""
+    import math
+    cfg = get_config(arch)
+    tree = jax.eval_shape(
+        lambda: T.init_params(jax.random.PRNGKey(0), cfg))
+    total = sum(math.prod(l.shape) for l in jax.tree.leaves(tree))
+    expected = cfg.param_count()
+    assert abs(total - expected) / expected < 0.25, (arch, total, expected)
+
+
+EXPECTED_SCALE = {                 # sanity: advertised model scale
+    "qwen1_5_32b": 32e9, "qwen3_14b": 14e9, "gemma_7b": 8.5e9,
+    "h2o_danube_1_8b": 1.8e9, "internvl2_1b": 0.6e9,
+    "llama4_maverick_400b_a17b": 400e9, "kimi_k2_1t_a32b": 1.0e12,
+    "rwkv6_7b": 7e9, "whisper_tiny": 37e6, "hymba_1_5b": 1.5e9,
+}
+
+
+@pytest.mark.parametrize("arch", list(EXPECTED_SCALE))
+def test_param_scale(arch):
+    got = get_config(arch).param_count()
+    want = EXPECTED_SCALE[arch]
+    assert want / 2.5 < got < want * 2.5, (arch, got, want)
