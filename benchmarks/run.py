@@ -3,8 +3,49 @@ report.  ``python -m benchmarks.run [--quick]``."""
 
 from __future__ import annotations
 
+import json
 import sys
 import time
+
+
+def bench_compile(quick: bool = False) -> None:
+    """Per-design compile wall-clock + plan quality -> BENCH_compile.json.
+
+    Tracks the pass-pipeline refactor's speedup in the bench trajectory:
+    cold compile (plan cache cleared), cached recompile, and the plan's
+    ``total_time`` for every §6.1 design on the paper's decode shape.
+    """
+    from repro.chip.config import ipu_pod4_hbm
+    from repro.configs import get_config
+    from repro.core.elk import compile_model
+    from repro.core.pipeline import clear_plan_cache
+
+    chip = ipu_pod4_hbm()
+    models = ("opt_30b",) if quick else ("opt_30b", "llama2_13b")
+    out: dict = {"chip": chip.name, "batch": 32, "seq": 2048,
+                 "phase": "decode", "models": {}}
+    for model in models:
+        cfg = get_config(model)
+        rec = {}
+        for design in ("Basic", "Static", "ELK-Dyn", "ELK-Full"):
+            clear_plan_cache()
+            t0 = time.perf_counter()
+            plan = compile_model(cfg, chip, batch=32, seq=2048,
+                                 phase="decode", design=design)
+            cold = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            compile_model(cfg, chip, batch=32, seq=2048, phase="decode",
+                          design=design)
+            warm = time.perf_counter() - t0
+            rec[design] = {"compile_s": round(cold, 4),
+                           "cached_compile_s": round(warm, 6),
+                           "plan_total_time": plan.total_time}
+            print(f"  {model:12s} {design:9s} compile={cold:7.2f}s "
+                  f"cached={warm*1e3:7.3f}ms plan={plan.total_time:.6g}s")
+        out["models"][model] = rec
+    with open("BENCH_compile.json", "w") as f:
+        json.dump(out, f, indent=1)
+    print("wrote BENCH_compile.json")
 
 
 def main() -> None:
@@ -13,6 +54,7 @@ def main() -> None:
     from benchmarks import paper_figs, roofline, validate_paper
 
     sections = [
+        ("bench_compile", lambda: bench_compile(quick)),
         ("fig12_costmodel", paper_figs.fig12_costmodel),
         ("fig16_compile_time", paper_figs.fig16_compile_time),
         ("fig17_latency", paper_figs.fig17_latency),
@@ -28,8 +70,8 @@ def main() -> None:
         ("multipod_table", roofline.multi_pod_table),
     ]
     if quick:
-        keep = {"fig12_costmodel", "fig18_breakdown", "validate_paper",
-                "roofline_table"}
+        keep = {"bench_compile", "fig12_costmodel", "fig18_breakdown",
+                "validate_paper", "roofline_table"}
         sections = [s for s in sections if s[0] in keep]
 
     for name, fn in sections:

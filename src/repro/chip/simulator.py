@@ -76,7 +76,6 @@ def simulate(plan: ExecutionPlan, chip: ChipConfig,
     busy_exec = 0.0
     overlap = 0.0
     noc_bytes_served = 0.0
-    stall = 0.0
 
     def preload_space(j: int) -> float:
         p = dec[j].preload_plan
@@ -212,9 +211,6 @@ def simulate(plan: ExecutionPlan, chip: ChipConfig,
             _enter_run()
         elif exe_phase == "run" and exe_left <= _EPS and (
                 exe_flow is None or exe_flow.weighted_bytes <= _EPS):
-            d = dec[cur]
-            if exe_left <= _EPS and exe_flow is not None:
-                stall += 0.0
             exe_done[cur] = t
             space_used = max(0.0, space_used - exec_space(cur))
             exe_phase, exe_flow = "idle", None

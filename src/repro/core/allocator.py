@@ -16,16 +16,32 @@ added_time``; stop when it fits (or report infeasible).
 The window cost combines (1) execution time, (2) data-distribution times,
 (3) interconnect contention (total traffic / aggregate bandwidth, §4.3), and
 (4) SRAM access contention (folded into ExecPlan.time per footnote 2).
+
+Incremental solving (DESIGN.md §2)
+----------------------------------
+The §4.2 backward induction allocates a *family* of windows per operator
+whose resident set grows by one preload as the cumulative issue count ``c``
+increases.  :class:`IncrementalWindow` replays the greedy exactly while
+sharing work across the family: the greedy's pop sequence — each round
+takes the best ``freed/added`` head among the items' Pareto step streams,
+first item winning ties — restricted to any subset of items is unaffected
+by the other items, so the pop sequence for ``items + x`` is the head-by-
+head merge of the existing sequence with ``x``'s own step stream.
+``add_item`` performs that merge; ``solve`` then just selects the shortest
+trace prefix whose freed space fits the capacity, reproducing a cold
+``allocate()`` bit-for-bit at a fraction of the work.
 """
 
 from __future__ import annotations
 
+import bisect
 import dataclasses
+import heapq
 import math
 from typing import Optional, Sequence
 
 from repro.chip.config import ChipConfig
-from repro.core.partition import ExecPlan, PreloadPlan
+from repro.core.partition import ExecPlan
 
 
 @dataclasses.dataclass(frozen=True)
@@ -50,11 +66,6 @@ class Allocation:
 
     def exec_plan(self, item: WindowItem) -> ExecPlan:
         return item.plans[self.choices[item.op_idx]]
-
-
-def _space_of(item: WindowItem, j: int) -> int:
-    p = item.plans[j]
-    return p.space
 
 
 def _window_cost(chip: ChipConfig, items: Sequence[WindowItem],
@@ -87,41 +98,140 @@ def _window_cost(chip: ChipConfig, items: Sequence[WindowItem],
     return cost, exec_t, dist_t, noc_t
 
 
+class IncrementalWindow:
+    """Exact incremental replay of the §4.3 greedy for a growing window."""
+
+    def __init__(self, chip: ChipConfig, capacity: Optional[int] = None):
+        self.chip = chip
+        self.cap = capacity if capacity is not None \
+            else chip.usable_sram_per_core
+        self.items: list[WindowItem] = []
+        self.base_space = 0          # all items at their starting choice
+        self._streams: list[list] = []   # per slot: [(delta, freed), ...]
+        self._next: list[int] = []       # per slot: first step not in trace
+        self._trace: list[tuple] = []    # (delta, slot, freed) in pop order
+        self._cum: list[float] = []      # prefix sums of freed space
+        self._heap: list[tuple] = []     # (-delta, slot): heads beyond trace
+
+    def add_item(self, item: WindowItem) -> None:
+        slot = len(self.items)
+        self.items.append(item)
+        start = item.fixed_choice if item.fixed else 0
+        self.base_space += item.plans[start].space
+        steps: list[tuple] = []
+        if not item.fixed:
+            plans = item.plans
+            j = start
+            while j + 1 < len(plans):
+                cur, nxt = plans[j], plans[j + 1]
+                freed = cur.space - nxt.space
+                if freed <= 0:
+                    # the cold greedy never advances past a non-freeing step
+                    break
+                if item.role == "exec":
+                    added = nxt.time - cur.time
+                else:
+                    added = nxt.dist_time - cur.dist_time
+                steps.append((freed / max(added, 1e-12), freed))
+                j += 1
+        self._streams.append(steps)
+        if not steps:
+            self._next.append(0)
+            return
+        k = 0
+        if self._trace:
+            # head-by-head merge; existing (lower-slot) entries win ties
+            merged: list[tuple] = []
+            for e in self._trace:
+                while k < len(steps) and steps[k][0] > e[0]:
+                    merged.append((steps[k][0], slot, steps[k][1]))
+                    k += 1
+                merged.append(e)
+            if k:
+                self._trace = merged
+                cum, run = [], 0.0
+                for _, _, freed in merged:
+                    run += freed
+                    cum.append(run)
+                self._cum = cum
+        self._next.append(k)
+        if k < len(steps):
+            heapq.heappush(self._heap, (-steps[k][0], slot))
+
+    def _extend(self) -> bool:
+        """Materialize the next greedy pop into the trace."""
+        if not self._heap:
+            return False
+        _, slot = heapq.heappop(self._heap)
+        k = self._next[slot]
+        delta, freed = self._streams[slot][k]
+        self._trace.append((delta, slot, freed))
+        self._cum.append((self._cum[-1] if self._cum else 0.0) + freed)
+        self._next[slot] = k + 1
+        if k + 1 < len(self._streams[slot]):
+            nd, _ = self._streams[slot][k + 1]
+            heapq.heappush(self._heap, (-nd, slot))
+        return True
+
+    def solve_core(self) -> tuple:
+        """Greedy result sans interconnect surcharge, cacheable by window
+        signature: (feasible, per-slot choices, space, exec_t, dist_t,
+        exec_noc_bytes)."""
+        over = self.base_space - self.cap
+        p = 0
+        feasible = True
+        if over > 0:
+            while not self._cum or self._cum[-1] < over:
+                if not self._extend():
+                    feasible = False
+                    break
+            # cum is strictly increasing (every step frees space): the
+            # shortest fitting prefix ends at the first entry >= over
+            p = (bisect.bisect_left(self._cum, over) + 1 if feasible
+                 else len(self._trace))
+        counts = [0] * len(self.items)
+        for _, slot, _ in self._trace[:p]:
+            counts[slot] += 1
+        choices = []
+        space = 0
+        exec_t = dist_t = exec_noc = 0.0
+        for slot, it in enumerate(self.items):
+            ch = (it.fixed_choice if it.fixed else 0) + counts[slot]
+            choices.append(ch)
+            plan = it.plans[ch]
+            space += plan.space
+            if it.role == "exec":
+                exec_t += plan.time
+                exec_noc += plan.noc_exec_bytes
+            else:
+                dist_t += plan.dist_time
+        return (feasible, tuple(choices), space, exec_t, dist_t, exec_noc)
+
+    def solve(self, extra_preload_noc: float = 0.0) -> Allocation:
+        return core_to_allocation(self.chip, self.items, self.solve_core(),
+                                  extra_preload_noc)
+
+
+def core_to_allocation(chip: ChipConfig, items: Sequence[WindowItem],
+                       core: tuple, extra_preload_noc: float = 0.0
+                       ) -> Allocation:
+    """Finish a (possibly cached) greedy core into a full Allocation by
+    folding in this window's preload-delivery surcharge."""
+    feasible, choices, space, exec_t, dist_t, exec_noc = core
+    by_op = {it.op_idx: ch for it, ch in zip(items, choices)}
+    if not feasible:
+        return Allocation(False, by_op, math.inf, math.inf, math.inf,
+                          space, math.inf)
+    noc_t = chip.noc_occupancy(exec_noc, extra_preload_noc)
+    stall = max(0.0, noc_t - exec_t)
+    return Allocation(True, by_op, exec_t, dist_t, noc_t, space,
+                      exec_t + dist_t + stall)
+
+
 def allocate(chip: ChipConfig, items: Sequence[WindowItem],
              capacity: Optional[int] = None,
              extra_preload_noc: float = 0.0) -> Allocation:
-    cap = capacity if capacity is not None else chip.usable_sram_per_core
-    choice = {it.op_idx: (it.fixed_choice if it.fixed else 0) for it in items}
-    space = sum(_space_of(it, choice[it.op_idx]) for it in items)
-
-    def steppable(it: WindowItem) -> bool:
-        return (not it.fixed) and choice[it.op_idx] + 1 < len(it.plans)
-
-    while space > cap:
-        best = None
-        for it in items:
-            if not steppable(it):
-                continue
-            j = choice[it.op_idx]
-            cur, nxt = it.plans[j], it.plans[j + 1]
-            freed = cur.space - nxt.space
-            if freed <= 0:
-                continue
-            if it.role == "exec":
-                added = nxt.time - cur.time
-            else:
-                added = nxt.dist_time - cur.dist_time
-            delta = freed / max(added, 1e-12)
-            if best is None or delta > best[0]:
-                best = (delta, it)
-        if best is None:
-            return Allocation(False, choice, math.inf, math.inf, math.inf,
-                              space, math.inf)
-        _, it = best
-        old = _space_of(it, choice[it.op_idx])
-        choice[it.op_idx] += 1
-        space += _space_of(it, choice[it.op_idx]) - old
-
-    cost, exec_t, dist_t, noc_t = _window_cost(chip, items, choice,
-                                               extra_preload_noc)
-    return Allocation(True, choice, exec_t, dist_t, noc_t, space, cost)
+    win = IncrementalWindow(chip, capacity)
+    for it in items:
+        win.add_item(it)
+    return win.solve(extra_preload_noc)

@@ -15,12 +15,11 @@
 
 from __future__ import annotations
 
-import math
+from typing import Optional
 
 from repro.chip.config import ChipConfig
-from repro.core.cost_model import AnalyticCostModel
 from repro.core.graph import OpGraph
-from repro.core.partition import enumerate_exec_plans
+from repro.core.pipeline import CompileContext
 from repro.core.plan import (Breakdown, ExecutionPlan, OpDecision, OpTiming,
                              Utilization)
 from repro.core.reorder import best_reordered_plan
@@ -30,68 +29,79 @@ DESIGNS = ("Basic", "Static", "ELK-Dyn", "ELK-Full", "Ideal")
 
 
 def build_plan(graph: OpGraph, chip: ChipConfig, design: str,
-               max_orders: int = 24) -> ExecutionPlan:
+               max_orders: int = 24, ctx: Optional[CompileContext] = None,
+               parallel: Optional[int] = None) -> ExecutionPlan:
+    """Per-design schedule/finalize/select passes.  One ``ctx`` serves every
+    Scheduler built here, so the §6.1 baseline sweeps re-enumerate nothing."""
+    ctx = ctx or CompileContext(chip)
     if design == "Basic":
-        sched = Scheduler(graph, chip, max_preload=1, exec_fastest=True)
+        sched = Scheduler(graph, chip, max_preload=1, exec_fastest=True,
+                          ctx=ctx)
         return sched.schedule(design="Basic")
     if design == "Static":
-        return _static_plan(graph, chip)
+        return _static_plan(graph, chip, ctx)
     if design == "ELK-Dyn":
-        return _elk_dyn(graph, chip)
+        return _elk_dyn(graph, chip, ctx=ctx)
     if design == "ELK-Full":
-        sched = Scheduler(graph, chip)
-        best = best_reordered_plan(sched, graph, chip, max_orders=max_orders)
-        dyn = _elk_dyn(graph, chip, design="ELK-Full")
+        sched = Scheduler(graph, chip, ctx=ctx)
+        best = best_reordered_plan(sched, graph, chip, max_orders=max_orders,
+                                   parallel=parallel)
+        dyn = _elk_dyn(graph, chip, design="ELK-Full", ctx=ctx)
         return dyn if dyn.total_time < best.total_time else best
     if design == "Ideal":
-        return ideal_plan(graph, chip)
+        return ideal_plan(graph, chip, ctx)
     raise KeyError(design)
 
 
-def _elk_dyn(graph: OpGraph, chip: ChipConfig,
-             design: str = "ELK-Dyn") -> ExecutionPlan:
+def _elk_dyn(graph: OpGraph, chip: ChipConfig, design: str = "ELK-Dyn",
+             ctx: Optional[CompileContext] = None) -> ExecutionPlan:
     """ELK's dynamic scheduling.  The exact §4.2/§4.3 search dominates any
     fixed execution-space split by construction; our greedy allocator is
     approximate, so the search space is explicitly widened with the capped
     variants (a fixed cap is one point of the paper's search space) and
     the best schedule wins."""
+    ctx = ctx or CompileContext(chip)
     cap = chip.usable_sram_per_core
-    best = Scheduler(graph, chip).schedule(design=design)
+    best = Scheduler(graph, chip, ctx=ctx).schedule(design=design)
     for frac in (0.25, 0.5, 0.75):
         for pfrac in (None, 0.0, 1.0):
             s = Scheduler(graph, chip, exec_space_cap=int(cap * frac),
-                          static_preload_frac=pfrac)
+                          static_preload_frac=pfrac, ctx=ctx)
             p = s.schedule(design=design)
             if p.total_time < best.total_time:
                 best = p
     return best
 
 
-def _static_plan(graph: OpGraph, chip: ChipConfig) -> ExecutionPlan:
+def _static_plan(graph: OpGraph, chip: ChipConfig,
+                 ctx: Optional[CompileContext] = None) -> ExecutionPlan:
+    ctx = ctx or CompileContext(chip)
     cap = chip.usable_sram_per_core
     best = None
     for frac in (0.25, 0.5, 0.75):
         for pfrac in (0.0, 1.0):
             sched = Scheduler(graph, chip,
                               exec_space_cap=int(cap * frac),
-                              static_preload_frac=pfrac)
+                              static_preload_frac=pfrac, ctx=ctx)
             plan = sched.schedule(design="Static")
             if best is None or plan.total_time < best.total_time:
                 best = plan
     return best
 
 
-def ideal_plan(graph: OpGraph, chip: ChipConfig) -> ExecutionPlan:
+def ideal_plan(graph: OpGraph, chip: ChipConfig,
+               ctx: Optional[CompileContext] = None) -> ExecutionPlan:
     """Roofline (paper §6.1 'Ideal'): exec pipeline and preload pipeline each
     run at full speed on private resources; total = max of the two."""
-    cost = AnalyticCostModel(chip)
+    ctx = ctx or CompileContext(chip)
+    cost = ctx.cost
     n = len(graph.ops)
     timing = [OpTiming() for _ in range(n)]
     decisions = []
     t_exec_sum = 0.0
     t_pre_sum = 0.0
     for i, op in enumerate(graph.ops):
-        plans = enumerate_exec_plans(op, chip, cost)
+        plans = ctx.curves.exec_plans(op)
         fastest = plans[0]
         t_exec_sum += fastest.time
         t_pre = cost.hbm_time(op.hbm_bytes) if op.hbm_bytes else 0.0

@@ -2,6 +2,10 @@
 
 ``compile_model(cfg, chip, design, ...)`` builds the operator graph and runs
 the chosen §6.1 design's scheduling pipeline, returning an ``ExecutionPlan``.
+Since the pass-pipeline refactor (DESIGN.md §1) this module is the thin
+public API over ``core.pipeline``: compiles run through a ``CompileContext``
+(shared Pareto-curve and allocation-window caches) and finished plans land
+in a process-level cache consumed by serving/integration/benchmarks.
 
 Large models (thousands of ops) exploit identical-layer periodicity: the
 schedule is computed for two truncations L1 < L2 of the layer stack and the
@@ -14,91 +18,36 @@ the paper's own use of layer identity in §4.4 and keeps compile times in the
 
 from __future__ import annotations
 
-import dataclasses
+from typing import Optional
 
 from repro.chip.config import ChipConfig
-from repro.core.baselines import build_plan
-from repro.core.graph import Phase, build_graph
-from repro.core.plan import Breakdown, ExecutionPlan, Utilization
+from repro.core.graph import Phase
+from repro.core.pipeline import CompileContext, compile_pipeline
+from repro.core.plan import ExecutionPlan
 from repro.models.config import ModelConfig
 
 
 def compile_model(cfg: ModelConfig, chip: ChipConfig, *, batch: int,
                   seq: int, phase: Phase = "decode",
                   design: str = "ELK-Full", max_exact_ops: int = 400,
-                  max_orders: int = 24) -> ExecutionPlan:
-    graph = build_graph(cfg, batch=batch, seq=seq, phase=phase)
-    if len(graph.ops) <= max_exact_ops:
-        return build_plan(graph, chip, design, max_orders=max_orders)
-    plan = _extrapolated(cfg, chip, batch, seq, phase, design, max_orders)
-    if design in ("ELK-Dyn", "ELK-Full"):
-        # ELK's search space contains every static configuration; linear
-        # layer-extrapolation is not monotonicity-preserving across designs,
-        # so re-impose dominance at the extrapolated level.
-        st = _extrapolated(cfg, chip, batch, seq, phase, "Static",
-                           max_orders)
-        if st.total_time < plan.total_time:
-            plan = dataclasses.replace(st, design=design)
-    return plan
-
-
-def _layer_counts(cfg: ModelConfig) -> tuple[int, int]:
-    period = max(cfg.moe_every, 1) if cfg.moe_experts else 1
-    l1 = cfg.moe_first_dense + 3 * period
-    l2 = l1 + 2 * period
-    if l2 >= cfg.num_layers:
-        return cfg.num_layers, cfg.num_layers
-    return l1, l2
-
-
-def _extrapolated(cfg, chip, batch, seq, phase, design, max_orders
-                  ) -> ExecutionPlan:
-    l1, l2 = _layer_counts(cfg)
-    cfg1 = dataclasses.replace(cfg, num_layers=l1)
-    cfg2 = dataclasses.replace(cfg, num_layers=l2)
-    g_full = build_graph(cfg, batch=batch, seq=seq, phase=phase)
-    p1 = build_plan(build_graph(cfg1, batch=batch, seq=seq, phase=phase),
-                    chip, design, max_orders=max_orders)
-    p2 = build_plan(build_graph(cfg2, batch=batch, seq=seq, phase=phase),
-                    chip, design, max_orders=max_orders)
-    if l1 == l2:
-        return p2
-
-    scale = (cfg.num_layers - l2) / (l2 - l1)
-
-    def ext(a: float, b: float) -> float:
-        return max(b + (b - a) * scale, 0.0)
-
-    total = ext(p1.total_time, p2.total_time)
-    breakdown = Breakdown(
-        preload_only=ext(p1.breakdown.preload_only, p2.breakdown.preload_only),
-        execute_only=ext(p1.breakdown.execute_only, p2.breakdown.execute_only),
-        overlapped=ext(p1.breakdown.overlapped, p2.breakdown.overlapped),
-        interconnect_stall=ext(p1.breakdown.interconnect_stall,
-                               p2.breakdown.interconnect_stall),
-    )
-    # extrapolate resource byte/flop totals, recompute utilizations
-    flops = sum(op.flops for op in g_full.ops)
-    hbm_bytes = sum(op.hbm_bytes for op in g_full.ops)
-
-    def occ_of(p: ExecutionPlan) -> float:
-        return p.util.interconnect * p.total_time
-
-    noc_occ = ext(occ_of(p1), occ_of(p2))
-    util = Utilization(
-        hbm=min(hbm_bytes / (chip.hbm_bw * total), 1.0) if chip.hbm_bw else 0.0,
-        interconnect=min(noc_occ / total, 1.0),
-        flops=min(flops / (chip.total_flops * total), 1.0),
-        achieved_tflops=flops / total / 1e12,
-    )
-    return ExecutionPlan(p2.graph, chip.name, design, p2.decisions,
-                         p2.preload_order, p2.timing, total, breakdown, util,
-                         extrapolated_from_layers=l2)
+                  max_orders: int = 24,
+                  ctx: Optional[CompileContext] = None,
+                  cache: bool = True,
+                  parallel: Optional[int] = None) -> ExecutionPlan:
+    return compile_pipeline(cfg, chip, batch=batch, seq=seq, phase=phase,
+                            design=design, max_exact_ops=max_exact_ops,
+                            max_orders=max_orders, ctx=ctx, cache=cache,
+                            parallel=parallel)
 
 
 def compare_designs(cfg: ModelConfig, chip: ChipConfig, *, batch: int,
                     seq: int, phase: Phase = "decode",
                     designs=("Basic", "Static", "ELK-Dyn", "ELK-Full",
-                             "Ideal"), **kw) -> dict[str, ExecutionPlan]:
+                             "Ideal"),
+                    ctx: Optional[CompileContext] = None,
+                    **kw) -> dict[str, ExecutionPlan]:
+    """Compile every design against one shared ``CompileContext`` — curves
+    and allocation windows are computed once and reused across designs."""
+    ctx = ctx or CompileContext(chip)
     return {d: compile_model(cfg, chip, batch=batch, seq=seq, phase=phase,
-                             design=d, **kw) for d in designs}
+                             design=d, ctx=ctx, **kw) for d in designs}

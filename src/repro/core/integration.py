@@ -43,7 +43,12 @@ def pod_plan(cfg: ModelConfig, *, batch: int, seq: int,
              phase: Phase = "decode", num_chips: int = 256,
              design: str = "ELK-Full") -> PodKnobs:
     """Run the faithful ELK compiler against the pod-as-ICCA-chip model and
-    translate its decisions to runtime knobs."""
+    translate its decisions to runtime knobs.
+
+    Repeat calls for the same (model, shape, design) hit the process-level
+    plan cache (DESIGN.md §2), so the serving/training stacks can ask for
+    knobs on the request path without recompiling.
+    """
     chip = tpu_v5e_pod(num_chips)
     plan = compile_model(cfg, chip, batch=batch, seq=seq, phase=phase,
                          design=design, max_orders=8)

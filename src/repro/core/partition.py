@@ -65,6 +65,17 @@ class PreloadPlan:
 
 # ---------------------------------------------------------------------------
 
+def op_curve_signature(op: Op) -> tuple:
+    """Hashable key capturing everything plan enumeration depends on.
+
+    Identical layers produce ops with identical signatures (only ``name``/
+    ``layer``/``preload_dep`` differ), so one curve computation serves every
+    repetition — the ``PlanCurveCache`` in ``core.pipeline`` keys on this.
+    """
+    return (op.kind, op.dims, op.reduce_dims, op.flops, op.out_bytes,
+            tuple((t.dims, t.bytes_total, t.from_hbm) for t in op.inputs))
+
+
 def _pow2_splits(dim: int, cores: int) -> list[int]:
     out, s = [], 1
     while s <= min(dim, cores):

@@ -19,11 +19,11 @@ Search space control, exactly as §4.4 prescribes:
 
 from __future__ import annotations
 
-from typing import Iterator, Sequence
+from typing import Iterator, Optional, Sequence
 
 from repro.chip.config import ChipConfig
 from repro.core.graph import OpGraph
-from repro.core.partition import enumerate_exec_plans, enumerate_preload_plans
+from repro.core.pipeline import CompileContext
 
 
 def heavy_ops_in_layer(graph: OpGraph) -> list[int]:
@@ -32,12 +32,14 @@ def heavy_ops_in_layer(graph: OpGraph) -> list[int]:
 
 
 def _min_preload_spaces(graph: OpGraph, chip: ChipConfig,
-                        idxs: Sequence[int]) -> dict[int, int]:
+                        idxs: Sequence[int],
+                        ctx: Optional[CompileContext] = None) -> dict[int, int]:
+    ctx = ctx or CompileContext(chip)
     out = {}
     for i in idxs:
         op = graph.ops[i]
-        ep = enumerate_exec_plans(op, chip)[-1]       # smallest exec plan
-        pp = enumerate_preload_plans(op, ep, chip)[-1]  # smallest preload
+        ep = ctx.curves.exec_plans(op)[-1]            # smallest exec plan
+        pp = ctx.curves.preload_plans(op, ep)[-1]     # smallest preload
         out[i] = pp.space
     return out
 
@@ -45,6 +47,7 @@ def _min_preload_spaces(graph: OpGraph, chip: ChipConfig,
 def valid_heavy_orders(graph: OpGraph, chip: ChipConfig,
                        max_orders: int = 720,
                        max_edit_distance: int | None = None,
+                       ctx: Optional[CompileContext] = None,
                        ) -> Iterator[tuple[int, ...]]:
     """Yield valid permutations of layer-0's heavy ops (execution-order
     indices), via the Fig.-14 back-to-front suffix walk with capacity
@@ -54,7 +57,7 @@ def valid_heavy_orders(graph: OpGraph, chip: ChipConfig,
     if h <= 1:
         yield tuple(heavy)
         return
-    spaces = _min_preload_spaces(graph, chip, heavy)
+    spaces = _min_preload_spaces(graph, chip, heavy, ctx)
     cap = chip.usable_sram_per_core
 
     if max_edit_distance is None:
@@ -137,17 +140,90 @@ def apply_heavy_order(graph: OpGraph, heavy_order: Sequence[int]) -> list[int]:
 
 
 def best_reordered_plan(scheduler, graph: OpGraph, chip: ChipConfig,
-                        max_orders: int = 64, design: str = "ELK-Full"):
+                        max_orders: int = 64, design: str = "ELK-Full",
+                        parallel: Optional[int] = None):
     """Try candidate preload orders, schedule each (§4.2 pass per §4.4),
-    return the best plan."""
+    return the best plan.
+
+    ``parallel`` > 1 farms candidate orders out to a process pool; each
+    worker owns a private ``CompileContext`` (caches do not cross process
+    boundaries) and the earliest-candidate-wins tie-break of the serial
+    loop is preserved, so results are identical either way.
+    """
+    ctx = getattr(scheduler, "ctx", None)
+    orders = [apply_heavy_order(graph, horder) for horder in
+              valid_heavy_orders(graph, chip, max_orders=max_orders, ctx=ctx)]
+    if parallel and parallel > 1 and len(orders) > 1 \
+            and _pool_safe(scheduler):
+        knobs = dict(max_preload=scheduler.max_preload,
+                     exec_space_cap=scheduler.exec_space_cap,
+                     static_preload_frac=scheduler.static_preload_frac,
+                     exec_fastest=scheduler.exec_fastest)
+        best = _parallel_best(graph, chip, orders, design, parallel, knobs)
+        if best is not None:
+            return best
     best = None
-    tried = 0
-    for horder in valid_heavy_orders(graph, chip, max_orders=max_orders):
-        pi = apply_heavy_order(graph, horder)
+    for pi in orders:
         plan = scheduler.schedule(pi, design=design)
-        tried += 1
         if best is None or plan.total_time < best.total_time:
             best = plan
     if best is None:
         best = scheduler.schedule(design=design)
     return best
+
+
+def _pool_safe(scheduler) -> bool:
+    """Workers rebuild the scheduler from its knobs; a custom cost model
+    would not survive the trip, so such schedulers stay on the serial path."""
+    from repro.core.cost_model import AnalyticCostModel
+    return type(scheduler.cost) is AnalyticCostModel
+
+
+def _eval_order_chunk(payload):
+    """Worker: schedule a chunk of candidate orders with the caller's
+    scheduler knobs, return the chunk's best plan and its global candidate
+    index (for deterministic tie-breaks)."""
+    from repro.core.scheduler import Scheduler
+    graph, chip, design, knobs, chunk = payload
+    sched = Scheduler(graph, chip, **knobs)
+    best = None
+    for idx, pi in chunk:
+        plan = sched.schedule(pi, design=design)
+        if best is None or plan.total_time < best[1].total_time:
+            best = (idx, plan)
+    return best
+
+
+def _parallel_best(graph, chip, orders, design, workers, knobs):
+    """Evaluate candidate orders on a spawn pool; None on pool failure (the
+    caller falls back to the serial loop).  Spawn, not fork: the parent has
+    usually initialized multithreaded JAX, and forking it can deadlock a
+    worker.  Workers only import the (numpy-level) scheduler stack, so the
+    spawn cost is import-bounded and paid once per pool."""
+    import multiprocessing as mp
+    from concurrent.futures import ProcessPoolExecutor
+
+    workers = min(workers, len(orders))
+    chunks = [[] for _ in range(workers)]
+    for idx, pi in enumerate(orders):
+        chunks[idx % workers].append((idx, pi))
+    try:
+        mp_ctx = mp.get_context("spawn")
+    except ValueError:
+        mp_ctx = None
+    try:
+        with ProcessPoolExecutor(max_workers=workers,
+                                 mp_context=mp_ctx) as pool:
+            results = list(pool.map(
+                _eval_order_chunk,
+                [(graph, chip, design, knobs, ch) for ch in chunks if ch]))
+    except Exception:  # noqa: BLE001 — optional acceleration only: spawn
+        # can fail in exotic parents (no importable __main__, exhausted
+        # fds, BrokenProcessPool); the serial loop is always correct
+        return None
+    results = [r for r in results if r is not None]
+    if not results:
+        return None
+    # serial loop keeps the earliest candidate on ties
+    _, plan = min(results, key=lambda r: (r[1].total_time, r[0]))
+    return plan

@@ -32,42 +32,46 @@ import math
 from typing import Optional, Sequence
 
 from repro.chip.config import ChipConfig
-from repro.core.allocator import WindowItem, allocate
+from repro.core.allocator import (IncrementalWindow, WindowItem,
+                                  _window_cost, core_to_allocation)
 from repro.core.cost_model import AnalyticCostModel
 from repro.core.graph import OpGraph
-from repro.core.partition import (ExecPlan, PreloadPlan, enumerate_exec_plans,
-                                  enumerate_preload_plans)
+from repro.core.partition import ExecPlan, PreloadPlan
+from repro.core.pipeline import CompileContext
 from repro.core.plan import (Breakdown, ExecutionPlan, OpDecision, OpTiming,
                              Utilization)
 
 _NEG_INF = -math.inf
 
 
-@dataclasses.dataclass
-class _OpCurves:
-    exec_plans: list[ExecPlan]
-    # preload curves depend on the chosen exec plan; cached per exec choice
-    _pre_cache: dict = dataclasses.field(default_factory=dict)
-
-    def preload_plans(self, op, exec_idx: int, chip, cost) -> list[PreloadPlan]:
-        if exec_idx not in self._pre_cache:
-            self._pre_cache[exec_idx] = enumerate_preload_plans(
-                op, self.exec_plans[exec_idx], chip, cost)
-        return self._pre_cache[exec_idx]
-
-
 class Scheduler:
-    """§4.2 scheduler for one operator graph on one chip."""
+    """§4.2 scheduler for one operator graph on one chip.
+
+    All Pareto curves come from the ``CompileContext``'s ``PlanCurveCache``
+    and every allocation window goes through its ``WindowCache`` — pass one
+    shared ``ctx`` to amortize curve enumeration and window solves across
+    Scheduler instances, candidate preload orders, and §6.1 designs.  With
+    ``ctx=None`` the scheduler builds a private context (a cold compile).
+    """
 
     def __init__(self, graph: OpGraph, chip: ChipConfig,
                  cost: Optional[AnalyticCostModel] = None,
                  max_preload: int = 64,
                  exec_space_cap: Optional[int] = None,
                  static_preload_frac: Optional[float] = None,
-                 exec_fastest: bool = False):
+                 exec_fastest: bool = False,
+                 ctx: Optional[CompileContext] = None):
         self.graph = graph
         self.chip = chip
-        self.cost = cost or AnalyticCostModel(chip)
+        if ctx is not None:
+            assert ctx.chip == chip, "CompileContext bound to a different chip"
+            if cost is not None and cost is not ctx.cost:
+                # curves come from ctx.cost; a different local cost model
+                # would silently produce an inconsistent schedule
+                raise ValueError("pass cost through the CompileContext, "
+                                 "not alongside it")
+        self.ctx = ctx or CompileContext(chip, cost)
+        self.cost = self.ctx.cost
         self.max_preload = max_preload
         # Baseline knobs (§6.1): a fixed execution-space budget (Static), a
         # fixed preload-plan policy, and Basic's "maximize execution space"
@@ -76,26 +80,42 @@ class Scheduler:
         self.static_preload_frac = static_preload_frac
         self.exec_fastest = exec_fastest
         self.curves = [self._curves(op) for op in graph.ops]
+        self._pre_memo: dict = {}
 
     # -- plan curves ---------------------------------------------------------
-    def _curves(self, op) -> _OpCurves:
-        plans = enumerate_exec_plans(op, self.chip, self.cost)
+    def _curves(self, op) -> list[ExecPlan]:
         if self.exec_space_cap is not None:
-            fit = [p for p in plans if p.space <= self.exec_space_cap]
-            plans = [min(fit or plans, key=lambda p: p.time)]
-        return _OpCurves(plans)
+            return self.ctx.curves.exec_plans_capped(op, self.exec_space_cap)
+        return self.ctx.curves.exec_plans(op)
 
     def _exec_curve(self, i: int) -> list[ExecPlan]:
-        return self.curves[i].exec_plans
+        return self.curves[i]
 
     def _pre_curve(self, i: int, exec_idx: int) -> list[PreloadPlan]:
-        plans = self.curves[i].preload_plans(
-            self.graph.ops[i], exec_idx, self.chip, self.cost)
-        if self.static_preload_frac is not None:
-            # Static baseline: largest- or smallest-footprint plan only
-            pick = plans[0] if self.static_preload_frac >= 0.5 else plans[-1]
-            return [pick]
-        return plans
+        key = (i, exec_idx)
+        got = self._pre_memo.get(key)
+        if got is None:
+            op = self.graph.ops[i]
+            ep = self.curves[i][exec_idx]
+            if self.static_preload_frac is not None:
+                # Static baseline: largest- or smallest-footprint plan only
+                got = self.ctx.curves.preload_plans_static(
+                    op, ep, self.static_preload_frac >= 0.5)
+            else:
+                got = self.ctx.curves.preload_plans(op, ep)
+            self._pre_memo[key] = got
+        return got
+
+    # -- window cache helpers -------------------------------------------------
+    def _window_key(self, items, cap: int):
+        uid_of = self.ctx.curves.uid_of
+        parts = []
+        for it in items:
+            uid = uid_of(it.plans)
+            if uid is None:
+                return None
+            parts.append((uid, it.fixed, it.fixed_choice))
+        return (cap, tuple(parts))
 
     # -- main entry -----------------------------------------------------------
     def schedule(self, preload_order: Optional[Sequence[int]] = None,
@@ -104,7 +124,6 @@ class Scheduler:
         n = len(graph.ops)
         pi = list(preload_order) if preload_order is not None else list(range(n))
         assert sorted(pi) == list(range(n)), "preload order must be a permutation"
-        self._pi = pi
         pos = [0] * n
         for m, j in enumerate(pi):
             pos[j] = m
@@ -132,14 +151,57 @@ class Scheduler:
         tau_s_pre = [_NEG_INF] * (n + 1)   # per preload position
         l_exe = [0.0] * n
 
+        cap = self.chip.usable_sram_per_core
+        windows = self.ctx.windows
         for i in range(n - 1, -1, -1):
             c_next = c_seq[i + 1]
             best = None
             lo = c_min[i]
             hi = min(c_next, i + 1 + self.max_preload, dep_cap[i])
             hi = max(hi, lo)
+            # Window family for exec(i): the resident set — ops issued (< c)
+            # and not yet executed (> i), the paper's Fig.-4 capacity
+            # tradeoff — grows by one preload per step of c, so the greedy
+            # descent warm-starts incrementally instead of re-running cold.
+            if self.exec_fastest:
+                # Basic (§6.1): execution space maximized, preloads squeeze
+                # into the remainder.
+                exec_item = WindowItem(i, "exec", self._exec_curve(i),
+                                       fixed=True, fixed_choice=0)
+            else:
+                exec_item = WindowItem(i, "exec", self._exec_curve(i))
+            fam = IncrementalWindow(self.chip, cap)
+            fam.add_item(exec_item)
+            added = 0
+            lo_alloc = None
+            lo_n_items = 1
             for c in range(lo, hi + 1):
-                alloc, items = self._allocate_window(i, c, c_next, exec_choice)
+                while added < c:
+                    j = pi[added]
+                    if j > i:
+                        fam.add_item(WindowItem(
+                            j, "preload",
+                            self._pre_curve(j, exec_choice[j])))
+                    added += 1
+                # preloads *issued during* this window ([c, c_next)) put
+                # their HBM-controller->core delivery bytes on the
+                # interconnect here; residents' delivery was charged to
+                # their issuing window.
+                extra_noc = sum(self._preload_noc_estimate(pi[m], exec_choice)
+                                for m in range(c, c_next))
+                core = None
+                key = self._window_key(fam.items, cap)
+                if key is not None:
+                    core = windows.get(key)
+                if core is None:
+                    core = fam.solve_core()
+                    if key is not None:
+                        windows.put(key, core)
+                alloc = core_to_allocation(self.chip, fam.items, core,
+                                           extra_noc)
+                if c == lo:
+                    lo_alloc = alloc
+                    lo_n_items = len(fam.items)
                 if not alloc.feasible:
                     # residents grow with c => larger c stays infeasible
                     if c > lo:
@@ -160,16 +222,23 @@ class Scheduler:
                 tau_e = max(tau_s_exe[i + 1], blocker, 0.0)
                 tau_s = tau_e + lexe
                 if best is None or tau_s < best[0] - 1e-15:
-                    best = (tau_s, c, alloc, items, tau_pre_local, lexe)
+                    best = (tau_s, c, alloc, tau_pre_local, lexe)
             if best is None:
                 # cannot fit even c = c_min: fall back to minimal window with
                 # smallest plans (degenerate but schedulable)
                 c = lo
-                alloc, items = self._allocate_window(i, c, c_next, exec_choice,
-                                                     force=True)
+                items = fam.items[:lo_n_items]
+                choice = {it.op_idx: len(it.plans) - 1 for it in items}
+                extra_noc = sum(self._preload_noc_estimate(pi[m], exec_choice)
+                                for m in range(c, c_next))
+                cost, e, d, nt = _window_cost(self.chip, items, choice,
+                                              extra_noc)
+                alloc = dataclasses.replace(
+                    lo_alloc, feasible=True, choices=choice, exec_time=e,
+                    dist_time=d, noc_time=nt, cost=cost)
                 lexe = alloc.exec_time
-                best = (tau_s_exe[i + 1] + lexe, c, alloc, items, {}, lexe)
-            tau_s, c, alloc, items, tau_pre_local, lexe = best
+                best = (tau_s_exe[i + 1] + lexe, c, alloc, {}, lexe)
+            tau_s, c, alloc, tau_pre_local, lexe = best
             c_seq[i] = c
             tau_s_exe[i] = tau_s
             l_exe[i] = lexe
@@ -179,45 +248,6 @@ class Scheduler:
 
         # ---- forward finalization ------------------------------------------
         return self._finalize(pi, pos, c_seq, exec_choice, design)
-
-    # -- window construction --------------------------------------------------
-    def _allocate_window(self, i: int, c: int, c_next: int,
-                         exec_choice: list[int], force: bool = False):
-        """Window for exec(i) with cumulative issue count ``c``.
-
-        Space: ops resident at the window start — issued (< c) and not yet
-        executed (> i).  This is the paper's Fig.-4 capacity tradeoff: a
-        deeper preload (larger c) leaves less execution space.
-        Traffic: preloads *issued during* this window ([c, c_next)) put their
-        HBM-controller->core delivery bytes on the interconnect here; the
-        already-resident ops' delivery was charged to their issuing window.
-        """
-        pi = self._pi
-        pi_resident = [j for j in pi[:c] if j > i]
-        if self.exec_fastest:
-            # Basic (§6.1): execution space maximized, preloads squeeze into
-            # the remainder.
-            items = [WindowItem(i, "exec", self._exec_curve(i),
-                                fixed=True, fixed_choice=0)]
-        else:
-            items = [WindowItem(i, "exec", self._exec_curve(i))]
-        for j in pi_resident:
-            items.append(WindowItem(
-                j, "preload", self._pre_curve(j, exec_choice[j])))
-        extra_noc = sum(self._preload_noc_estimate(pi[m], exec_choice)
-                        for m in range(c, c_next))
-        cap = self.chip.usable_sram_per_core
-        alloc = allocate(self.chip, items, capacity=cap,
-                         extra_preload_noc=extra_noc)
-        if not alloc.feasible and force:
-            # take the smallest plans unconditionally
-            choice = {it.op_idx: len(it.plans) - 1 for it in items}
-            from repro.core.allocator import _window_cost
-            cost, e, d, nt = _window_cost(self.chip, items, choice, extra_noc)
-            alloc = dataclasses.replace(
-                alloc, feasible=True, choices=choice, exec_time=e,
-                dist_time=d, noc_time=nt, cost=cost)
-        return alloc, items
 
     def _preload_noc_estimate(self, j: int, exec_choice: list[int]) -> float:
         """Delivery bytes of op j's preload (min-space plan estimate; the
@@ -358,24 +388,25 @@ class Scheduler:
                              total, breakdown, util)
 
     def _allocate_window_items(self, items, extra_noc: float = 0.0):
-        alloc = allocate(self.chip, items, extra_preload_noc=extra_noc)
+        cap = self.chip.usable_sram_per_core
+        key = self._window_key(items, cap)
+        core = self.ctx.windows.get(key) if key is not None else None
+        if core is None:
+            win = IncrementalWindow(self.chip, cap)
+            for it in items:
+                win.add_item(it)
+            core = win.solve_core()
+            if key is not None:
+                self.ctx.windows.put(key, core)
+        alloc = core_to_allocation(self.chip, items, core, extra_noc)
         if not alloc.feasible:
             choice = {it.op_idx: (it.fixed_choice if it.fixed
                                   else len(it.plans) - 1) for it in items}
-            from repro.core.allocator import _window_cost
             cost, e, d, nt = _window_cost(self.chip, items, choice, extra_noc)
             alloc = dataclasses.replace(alloc, feasible=True, choices=choice,
                                         exec_time=e, dist_time=d, noc_time=nt,
                                         cost=cost)
         return alloc, items
-
-    # preload order of the in-flight schedule() call
-    @property
-    def _pi_cache(self):
-        return self._pi
-
-    def schedule_with_order(self, pi, design="ELK-Full"):
-        return self.schedule(pi, design=design)
 
 
 def tau_s_exe_at(tau_s_exe: list[float], j: int, n: int) -> float:

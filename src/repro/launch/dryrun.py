@@ -44,9 +44,19 @@ def cell_path(arch: str, shape: str, mesh_name: str, mode: str) -> str:
     return os.path.join(OUT_DIR, tag + ".json")
 
 
+def _plan_prefetch_depth(cfg, shape: str) -> int:
+    """Prefetch depth from the ELK scheduler (cached plan, DESIGN.md §2):
+    repeat cells for the same arch/shape reuse one compile."""
+    from repro.core.integration import pod_plan
+    case = SHAPES[shape]
+    knobs = pod_plan(cfg, batch=case.batch, seq=case.seq, phase="decode")
+    return max(knobs.prefetch_depth, 1)
+
+
 def run_cell(arch: str, shape: str, mesh_name: str, *, mode: str = "elk",
              prefetch_depth: int = 2, force: bool = False,
              extra_tag: str = "") -> dict:
+    """``prefetch_depth=0`` asks the ELK scheduler (via the plan cache)."""
     os.makedirs(OUT_DIR, exist_ok=True)
     path = cell_path(arch, shape, mesh_name, mode)
     if extra_tag:
@@ -63,6 +73,8 @@ def run_cell(arch: str, shape: str, mesh_name: str, *, mode: str = "elk",
         with open(path, "w") as f:
             json.dump(rec, f, indent=1)
         return rec
+    if prefetch_depth <= 0:
+        prefetch_depth = _plan_prefetch_depth(cfg, shape)
 
     mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
     n_chips = mesh_num_devices(mesh)
@@ -287,7 +299,9 @@ def main() -> None:
     ap.add_argument("--mesh", choices=["single", "multi", "both"],
                     default="both")
     ap.add_argument("--mode", choices=["elk", "gspmd"], default="elk")
-    ap.add_argument("--prefetch-depth", type=int, default=2)
+    ap.add_argument("--prefetch-depth", type=int, default=2,
+                    help="0 = derive per cell from the ELK scheduler "
+                         "(cached across cells)")
     ap.add_argument("--force", action="store_true")
     ap.add_argument("--all", action="store_true",
                     help="alias for --arch all --shape all --mesh both")

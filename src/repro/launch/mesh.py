@@ -9,7 +9,19 @@ initialization and only then calls these.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+
+def _make_mesh(shape, axes) -> Mesh:
+    """jax.make_mesh, with explicit Auto axis types where the installed jax
+    supports them (jax < 0.5 has neither AxisType nor the kwarg — its meshes
+    are implicitly Auto)."""
+    try:
+        from jax.sharding import AxisType
+    except ImportError:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
@@ -17,8 +29,7 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     pod axis of pure data parallelism, (pod=2, data=16, model=16) = 512."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_local_mesh(data: int = 1, model: int = 1) -> Mesh:
@@ -26,8 +37,7 @@ def make_local_mesh(data: int = 1, model: int = 1) -> Mesh:
     n = len(jax.devices())
     if data * model > n:
         data, model = n, 1
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    return _make_mesh((data, model), ("data", "model"))
 
 
 def mesh_num_devices(mesh: Mesh) -> int:

@@ -12,10 +12,9 @@ import time
 import jax
 
 from repro.configs import ARCH_IDS, canonical, get_config, get_smoke_config
-from repro.core.integration import pod_plan
 from repro.launch.mesh import make_local_mesh, make_production_mesh
 from repro.models import transformer as tfm
-from repro.serve.engine import ServeConfig, ServeEngine
+from repro.serve.engine import ServeConfig, ServeEngine, elk_serve_config
 
 
 def main() -> None:
@@ -41,18 +40,19 @@ def main() -> None:
     mesh = (make_production_mesh() if args.production_mesh
             else make_local_mesh())
 
-    p = args.prefetch_depth
-    if p <= 0 and args.mode == "elk_stream":
-        knobs = pod_plan(get_config(arch), batch=args.batch,
-                         seq=args.cache, phase="decode")
-        p = knobs.prefetch_depth
-        print(f"ELK scheduler: prefetch_depth={p} "
-              f"resident_fraction={knobs.resident_fraction:.3f}")
+    if args.prefetch_depth <= 0 and args.mode == "elk_stream":
+        scfg = elk_serve_config(get_config(arch), batch=args.batch,
+                                cache_capacity=args.cache,
+                                kv_dtype=args.kv_dtype)
+        print(f"ELK scheduler: prefetch_depth={scfg.prefetch_depth}")
+    else:
+        scfg = ServeConfig(
+            batch=args.batch, cache_capacity=args.cache, mode=args.mode,
+            prefetch_depth=max(args.prefetch_depth, 1),
+            kv_dtype=args.kv_dtype)
 
     params = tfm.init_params(jax.random.PRNGKey(0), cfg)
-    eng = ServeEngine(cfg, mesh, params, ServeConfig(
-        batch=args.batch, cache_capacity=args.cache, mode=args.mode,
-        prefetch_depth=max(p, 1), kv_dtype=args.kv_dtype))
+    eng = ServeEngine(cfg, mesh, params, scfg)
     prompts = jax.random.randint(
         jax.random.PRNGKey(1), (args.batch, args.prompt_len), 0,
         cfg.vocab_size)

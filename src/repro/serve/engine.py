@@ -41,6 +41,25 @@ class ServeConfig:
     kv_dtype: str = "bfloat16"        # bfloat16 | int8
 
 
+def elk_serve_config(cfg: ModelConfig, *, batch: int, cache_capacity: int,
+                     kv_dtype: str = "bfloat16", num_chips: int = 256,
+                     design: str = "ELK-Full") -> ServeConfig:
+    """ServeConfig with the prefetch depth chosen by the ELK scheduler.
+
+    ``pod_plan`` reads the process-level plan cache (DESIGN.md §2), so this
+    is cheap to call per engine/request once any compile for the same
+    (model, shape, design) has happened in this process.
+    """
+    from repro.core.integration import pod_plan
+
+    knobs = pod_plan(cfg, batch=batch, seq=cache_capacity, phase="decode",
+                     num_chips=num_chips, design=design)
+    return ServeConfig(batch=batch, cache_capacity=cache_capacity,
+                       mode="elk_stream",
+                       prefetch_depth=max(knobs.prefetch_depth, 1),
+                       kv_dtype=kv_dtype)
+
+
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, mesh, params: PyTree,
                  scfg: ServeConfig):

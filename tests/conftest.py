@@ -3,11 +3,12 @@ forces 512 host devices; smoke tests must see the real (1-device) CPU."""
 import jax
 import pytest
 
+from repro.launch.mesh import _make_mesh
+
 
 @pytest.fixture(scope="session")
 def mesh11():
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return _make_mesh((1, 1), ("data", "model"))
 
 
 @pytest.fixture(scope="session")

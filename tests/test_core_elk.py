@@ -3,7 +3,10 @@
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis",
+                    reason="dev dependency (see requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.chip.config import ipu_pod4_hbm, ipu_mk2
 from repro.configs import get_config

@@ -1,0 +1,218 @@
+"""Tests for the cached, incremental compile pipeline (DESIGN.md §1-§2).
+
+Deliberately hypothesis-free: this file is the ELK-core coverage that still
+runs where the optional dev dependencies are absent.
+"""
+
+import dataclasses
+import math
+import random
+
+import pytest
+
+from repro.chip.config import ipu_pod4_hbm
+from repro.configs import get_config
+from repro.core.allocator import (Allocation, IncrementalWindow, WindowItem,
+                                  _window_cost, allocate)
+from repro.core.elk import compare_designs, compile_model
+from repro.core.graph import build_graph
+from repro.core.partition import (enumerate_exec_plans,
+                                  enumerate_preload_plans)
+from repro.core.pipeline import (CompileContext, clear_plan_cache,
+                                 plan_cache)
+from repro.core.scheduler import Scheduler
+
+CHIP = ipu_pod4_hbm()
+
+
+@pytest.fixture(scope="module")
+def small_cfg():
+    return dataclasses.replace(get_config("llama2_13b"), num_layers=2)
+
+
+@pytest.fixture(scope="module")
+def small_graph(small_cfg):
+    return build_graph(small_cfg, batch=32, seq=2048, phase="decode")
+
+
+# ---------------------------------------------------------------------------
+# incremental allocator == cold greedy
+# ---------------------------------------------------------------------------
+
+def _reference_allocate(chip, items, capacity=None, extra=0.0):
+    """The pre-refactor §4.3 greedy, verbatim: the exactness oracle."""
+    cap = capacity if capacity is not None else chip.usable_sram_per_core
+    choice = {it.op_idx: (it.fixed_choice if it.fixed else 0) for it in items}
+    space = sum(it.plans[choice[it.op_idx]].space for it in items)
+
+    def steppable(it):
+        return (not it.fixed) and choice[it.op_idx] + 1 < len(it.plans)
+
+    while space > cap:
+        best = None
+        for it in items:
+            if not steppable(it):
+                continue
+            j = choice[it.op_idx]
+            cur, nxt = it.plans[j], it.plans[j + 1]
+            freed = cur.space - nxt.space
+            if freed <= 0:
+                continue
+            added = ((nxt.time - cur.time) if it.role == "exec"
+                     else (nxt.dist_time - cur.dist_time))
+            delta = freed / max(added, 1e-12)
+            if best is None or delta > best[0]:
+                best = (delta, it)
+        if best is None:
+            return Allocation(False, choice, math.inf, math.inf, math.inf,
+                              space, math.inf)
+        _, it = best
+        old = it.plans[choice[it.op_idx]].space
+        choice[it.op_idx] += 1
+        space += it.plans[choice[it.op_idx]].space - old
+    cost, e, d, nt = _window_cost(chip, items, choice, extra)
+    return Allocation(True, choice, e, d, nt, space, cost)
+
+
+class TestIncrementalAllocator:
+    def _random_items(self, rng, graph, k):
+        mats = [o for o in graph.ops if o.kind == "matmul"]
+        ops = rng.sample(mats, k + 1)
+        items = [WindowItem(0, "exec", enumerate_exec_plans(ops[0], CHIP))]
+        for i, op in enumerate(ops[1:], 1):
+            eps = enumerate_exec_plans(op, CHIP)
+            ep = eps[rng.randrange(len(eps))]
+            items.append(WindowItem(i, "preload",
+                                    enumerate_preload_plans(op, ep, CHIP)))
+        return items
+
+    def test_matches_reference_on_random_windows(self, small_graph):
+        rng = random.Random(7)
+        for _ in range(60):
+            items = self._random_items(rng, small_graph, rng.randint(1, 6))
+            cap = int(CHIP.usable_sram_per_core * rng.uniform(0.05, 1.2))
+            extra = rng.uniform(0.0, 1e9)
+            got = allocate(CHIP, items, capacity=cap, extra_preload_noc=extra)
+            want = _reference_allocate(CHIP, items, capacity=cap, extra=extra)
+            assert got.feasible == want.feasible
+            assert got.choices == want.choices
+            assert got.space == want.space
+            if got.feasible:
+                assert got.cost == want.cost
+                assert got.exec_time == want.exec_time
+                assert got.noc_time == want.noc_time
+
+    def test_incremental_grow_by_one_matches_scratch(self, small_graph):
+        """The §4.2 backward induction's window families: solving after each
+        add_item must equal a from-scratch allocate() of the same items."""
+        rng = random.Random(11)
+        for _ in range(25):
+            items = self._random_items(rng, small_graph, rng.randint(2, 7))
+            cap = int(CHIP.usable_sram_per_core * rng.uniform(0.1, 1.0))
+            win = IncrementalWindow(CHIP, cap)
+            for j, it in enumerate(items):
+                win.add_item(it)
+                inc = win.solve(0.0)
+                scratch = _reference_allocate(CHIP, items[:j + 1],
+                                              capacity=cap)
+                assert inc.feasible == scratch.feasible, (j, cap)
+                assert inc.choices == scratch.choices, (j, cap)
+                assert inc.space == scratch.space
+
+    def test_fixed_items_never_step(self, small_graph):
+        op = next(o for o in small_graph.ops if o.kind == "matmul")
+        plans = enumerate_exec_plans(op, CHIP)
+        items = [WindowItem(0, "exec", plans, fixed=True, fixed_choice=0),
+                 WindowItem(1, "preload",
+                            enumerate_preload_plans(op, plans[0], CHIP))]
+        a = allocate(CHIP, items, capacity=plans[0].space)
+        assert a.choices[0] == 0
+
+
+# ---------------------------------------------------------------------------
+# curve / window caches
+# ---------------------------------------------------------------------------
+
+class TestCurveCache:
+    def test_identical_layers_share_curves(self, small_graph):
+        ctx = CompileContext(CHIP)
+        l0 = [op for op in small_graph.ops if op.layer == 0]
+        l1 = [op for op in small_graph.ops if op.layer == 1]
+        for a, b in zip(l0, l1):
+            assert ctx.curves.exec_plans(a) is ctx.curves.exec_plans(b)
+
+    def test_hits_across_designs(self, small_cfg):
+        """compare_designs shares one context: every design after the first
+        reuses curves and allocation windows."""
+        clear_plan_cache()
+        ctx = CompileContext(CHIP)
+        compare_designs(small_cfg, CHIP, batch=32, seq=2048, phase="decode",
+                        ctx=ctx, cache=False)
+        assert ctx.curves.hits > 0
+        assert ctx.curves.hits > ctx.curves.misses
+        assert ctx.windows.hits > 0
+
+    def test_uid_registry(self, small_graph):
+        ctx = CompileContext(CHIP)
+        op = small_graph.ops[0]
+        plans = ctx.curves.exec_plans(op)
+        assert ctx.curves.uid_of(plans) is not None
+        assert ctx.curves.uid_of([1, 2, 3]) is None
+
+
+# ---------------------------------------------------------------------------
+# pipeline plan identity + plan cache
+# ---------------------------------------------------------------------------
+
+class TestPlanIdentity:
+    def test_warm_context_bit_identical_to_cold(self, small_cfg):
+        """A plan from a warm shared context equals a cold compile exactly:
+        same total_time, same decisions, same preload order, same timing."""
+        clear_plan_cache()
+        ctx = CompileContext(CHIP)
+        # warm the context with other designs/orders first
+        compile_model(small_cfg, CHIP, batch=32, seq=2048, phase="decode",
+                      design="ELK-Dyn", ctx=ctx, cache=False)
+        warm = compile_model(small_cfg, CHIP, batch=32, seq=2048,
+                             phase="decode", design="ELK-Full", ctx=ctx,
+                             cache=False)
+        cold = compile_model(small_cfg, CHIP, batch=32, seq=2048,
+                             phase="decode", design="ELK-Full", cache=False)
+        assert warm.total_time == cold.total_time
+        assert warm.preload_order == cold.preload_order
+        assert warm.decisions == cold.decisions
+        assert warm.timing == cold.timing
+
+    def test_scheduler_private_ctx_matches_shared(self, small_graph):
+        shared = CompileContext(CHIP)
+        p1 = Scheduler(small_graph, CHIP, ctx=shared).schedule()
+        p2 = Scheduler(small_graph, CHIP).schedule()
+        assert p1.total_time == p2.total_time
+        assert p1.decisions == p2.decisions
+
+    def test_plan_cache_returns_same_object(self, small_cfg):
+        clear_plan_cache()
+        kw = dict(batch=32, seq=2048, phase="decode", design="Static")
+        a = compile_model(small_cfg, CHIP, **kw)
+        b = compile_model(small_cfg, CHIP, **kw)
+        assert a is b
+        assert plan_cache().hits > 0
+
+    def test_plan_cache_distinguishes_designs(self, small_cfg):
+        clear_plan_cache()
+        a = compile_model(small_cfg, CHIP, batch=32, seq=2048,
+                          phase="decode", design="Basic")
+        b = compile_model(small_cfg, CHIP, batch=32, seq=2048,
+                          phase="decode", design="Ideal")
+        assert a.design == "Basic" and b.design == "Ideal"
+
+    def test_parallel_orders_match_serial(self, small_cfg):
+        clear_plan_cache()
+        serial = compile_model(small_cfg, CHIP, batch=32, seq=2048,
+                               phase="decode", design="ELK-Full",
+                               max_orders=6, cache=False)
+        par = compile_model(small_cfg, CHIP, batch=32, seq=2048,
+                            phase="decode", design="ELK-Full",
+                            max_orders=6, cache=False, parallel=2)
+        assert par.total_time == serial.total_time
+        assert par.preload_order == serial.preload_order
