@@ -173,6 +173,22 @@ def fig23_cores(model="dit_xl", batch=32, seq=256) -> list[dict]:
     return rows
 
 
+def fig24_topology(model="llama2_13b", batch=32, seq=2048,
+                   topologies=("all2all", "mesh2d", "torus2d", "ring",
+                               "hier_pod")) -> list[dict]:
+    """§6.4 topology DSE: the interconnect topology is a first-class axis
+    of the simulator toolkit.  Per-topology plan latency for Basic /
+    ELK-Full / Ideal plus an event-simulated latency on a 2-layer
+    truncation (per-link-class contention), reproducing the sensitivity
+    story across >= 4 topologies."""
+    from repro.chip.dse import topology_sweep
+    rows = topology_sweep(get_config(model), topologies, batch=batch,
+                          seq=seq, designs=("Basic", "ELK-Full", "Ideal"),
+                          max_orders=24)
+    emit("fig24_topology", rows)
+    return rows
+
+
 def fig24_training(model="llama2_13b", batch=8, seq=2048) -> list[dict]:
     """Training forward pass TFLOPS vs compute/bandwidth scaling."""
     rows = []

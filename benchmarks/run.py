@@ -1,10 +1,10 @@
 """Benchmark driver: one section per paper table/figure + the roofline
-report.  ``python -m benchmarks.run [--quick]``."""
+report.  ``python -m benchmarks.run [--quick] [--section NAME ...]``."""
 
 from __future__ import annotations
 
+import argparse
 import json
-import sys
 import time
 
 
@@ -48,8 +48,16 @@ def bench_compile(quick: bool = False) -> None:
     print("wrote BENCH_compile.json")
 
 
-def main() -> None:
-    quick = "--quick" in sys.argv
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="small model set + core sections only")
+    ap.add_argument("--section", action="append", default=None,
+                    metavar="NAME",
+                    help="run only the named section(s); 'compile' is an "
+                         "alias for bench_compile (repeatable)")
+    args = ap.parse_args(argv)
+    quick = args.quick
     t0 = time.time()
     from benchmarks import paper_figs, roofline, validate_paper
 
@@ -63,17 +71,28 @@ def main() -> None:
         ("fig21_topology", paper_figs.fig21_topology),
         ("fig22_noc_sweep", paper_figs.fig22_noc_sweep),
         ("fig23_cores", paper_figs.fig23_cores),
+        ("fig24_topology", paper_figs.fig24_topology),
         ("fig24_training", paper_figs.fig24_training),
         ("simulator_validation", paper_figs.simulator_validation),
         ("validate_paper", validate_paper.validate),
         ("roofline_table", roofline.roofline_table),
         ("multipod_table", roofline.multi_pod_table),
     ]
-    if quick:
+    if args.section:
+        aliases = {"compile": "bench_compile"}
+        wanted = {aliases.get(s, s) for s in args.section}
+        known = {name for name, _ in sections}
+        unknown = wanted - known
+        if unknown:
+            ap.error(f"unknown section(s) {sorted(unknown)}; "
+                     f"known: {sorted(known)}")
+        sections = [s for s in sections if s[0] in wanted]
+    elif quick:
         keep = {"bench_compile", "fig12_costmodel", "fig18_breakdown",
-                "validate_paper", "roofline_table"}
+                "fig24_topology", "validate_paper", "roofline_table"}
         sections = [s for s in sections if s[0] in keep]
 
+    failed = []
     for name, fn in sections:
         print(f"\n===== {name} =====")
         t = time.time()
@@ -81,9 +100,13 @@ def main() -> None:
             fn()
         except Exception as e:  # noqa: BLE001
             print(f"[ERROR] {name}: {type(e).__name__}: {e}")
+            failed.append(name)
         print(f"----- {name} done in {time.time() - t:.1f}s")
     print(f"\nall benchmarks finished in {time.time() - t0:.1f}s; "
           f"CSVs in experiments/bench/")
+    if failed:
+        print(f"FAILED sections: {', '.join(failed)}")
+        raise SystemExit(1)
 
 
 if __name__ == "__main__":

@@ -8,9 +8,14 @@ bytes/s, capacities bytes, compute FLOP/s.
 from __future__ import annotations
 
 import dataclasses
-from typing import Literal
 
-Topology = Literal["all2all", "mesh2d"]
+from repro.chip.topology import (TOPOLOGIES, TopologyModel, build_topology,
+                                 near_square_grid)
+
+# Registry key into chip/topology.TOPOLOGIES ("all2all", "mesh2d",
+# "torus2d", "ring", "hier_pod", ...); kept as a plain str alias so the
+# pre-refactor annotations stay valid.
+Topology = str
 
 KB = 1024
 MB = 1024 * KB
@@ -32,6 +37,10 @@ class ChipConfig:
     topology: Topology = "all2all"
     num_chips: int = 1                 # multi-chip pod: NoC topology is per-chip
     mesh_dims: tuple[int, int] = (0, 0)    # per-chip mesh; (0,0) -> near-square
+    # hier_pod: inter-chip tier = inter_links_per_chip gateway links per chip,
+    # each at inter_bw_ratio * link_bw (a distinct, slower link class).
+    inter_bw_ratio: float = 0.25
+    inter_links_per_chip: int = 8
     hbm_bw: float = 0.0                # aggregate off-chip bandwidth
     hbm_controllers: int = 4
     hbm_latency: float = 1e-6          # per-request latency (s)
@@ -41,6 +50,19 @@ class ChipConfig:
     # IPU-style SRAM port contention: remote reads block local compute (§2.3 ③,
     # footnote 2).  False for chips whose local memory is dual-ported.
     sram_port_blocking: bool = True
+
+    def __post_init__(self):
+        # fail at the construction site, not at the first chip.topo access
+        # deep inside a compile
+        if self.topology not in TOPOLOGIES:
+            raise ValueError(f"unknown topology {self.topology!r}; "
+                             f"known: {sorted(TOPOLOGIES)}")
+        if self.topology == "hier_pod" and (
+                self.inter_bw_ratio <= 0 or self.inter_links_per_chip <= 0):
+            raise ValueError(
+                "hier_pod needs inter_bw_ratio > 0 and "
+                f"inter_links_per_chip > 0, got {self.inter_bw_ratio!r} / "
+                f"{self.inter_links_per_chip!r}")
 
     # ---- derived -----------------------------------------------------------
     @property
@@ -67,55 +89,54 @@ class ChipConfig:
     @property
     def mesh_shape(self) -> tuple[int, int]:
         """Per-chip mesh grid (paper §6.1 simulates 4 chips, each its own NoC)."""
-        if self.topology != "mesh2d":
+        if self.topology not in ("mesh2d", "torus2d"):
             raise ValueError("mesh_shape on non-mesh chip")
         if self.mesh_dims != (0, 0):
             return self.mesh_dims
-        # near-square factorization of the per-chip core count
-        n = self.cores_per_chip
-        r = int(n ** 0.5)
-        while n % r:
-            r -= 1
-        return (r, n // r)
+        return near_square_grid(self.cores_per_chip)
 
-    # ---- NoC traffic model (paper §5 mapping strategies) --------------------
-    # all2all: each core drives one 5.5GB/s link at a time => capacity N*link,
-    #   every transfer is 1 "hop".
-    # mesh2d: each core talks to up to 4 neighbors simultaneously (paper §6.1)
-    #   => capacity 4*N*link, but a transfer consumes one link per hop.
-    #   Dimension-order routing maps partition dims to mesh dims, so
-    #   compute-shift rotations / ring reductions are neighbor hops (1);
-    #   the data-distribution phase fetches within a group mapped to a mesh
-    #   dim (~2 hops); HBM controllers sit on the grid edges, so preload
-    #   traffic crosses (rows+cols)/4 links on average.
+    # ---- NoC traffic model --------------------------------------------------
+    # Delegated to the pluggable topology subsystem (chip/topology.py): the
+    # bound TopologyModel owns routing hop weights, per-link-class capacities
+    # and collective cost shapes; the properties below are the back-compat
+    # scalar vocabulary the compiler core and simulator consume.
+    @property
+    def topo(self) -> TopologyModel:
+        # memoized on the instance: hashing the whole dataclass per lookup
+        # is too slow for the allocator/scheduler hot paths
+        t = self.__dict__.get("_topo")
+        if t is None:
+            t = build_topology(self)
+            object.__setattr__(self, "_topo", t)
+        return t
+
+    @property
+    def topo_signature(self) -> tuple:
+        """Hashable topology identity for compile-pipeline cache keys."""
+        return self.topo.signature()
+
     @property
     def noc_capacity(self) -> float:
-        if self.topology == "all2all":
-            return self.num_cores * self.link_bw
-        return 4 * self.num_cores * self.link_bw
+        return self.topo.total_capacity
 
     @property
     def preload_hops(self) -> float:
-        if self.topology == "all2all":
-            return 1.0
-        r, c = self.mesh_shape
-        return max((r + c) / 4.0, 1.0)
+        return self.topo.preload_hops
 
     @property
     def dist_hops(self) -> float:
-        return 1.0 if self.topology == "all2all" else 2.0
+        return self.topo.dist_hops
 
     @property
     def preload_noc_bw(self) -> float:
         """Effective HBM-controller->cores delivery bandwidth over the NoC."""
-        return self.noc_capacity / self.preload_hops
+        return self.topo.preload_delivery_bw
 
     def noc_occupancy(self, exec_bytes: float, preload_bytes: float,
                       dist_bytes: float = 0.0) -> float:
-        """Seconds of aggregate link capacity consumed by a traffic mix."""
-        weighted = (exec_bytes + preload_bytes * self.preload_hops
-                    + dist_bytes * self.dist_hops)
-        return weighted / self.noc_capacity
+        """Seconds of link capacity consumed by a traffic mix (bottleneck
+        tier for multi-class topologies)."""
+        return self.topo.occupancy(exec_bytes, preload_bytes, dist_bytes)
 
     def scaled(self, **kw) -> "ChipConfig":
         return dataclasses.replace(self, **kw)

@@ -1,0 +1,59 @@
+"""Topology design-space sweep (paper §6.4), shared by
+``examples/dse_explore.py`` and ``benchmarks/paper_figs.fig24_topology``.
+
+One row per (topology, design): the compiled plan's latency plus an
+event-simulated latency on a small layer truncation (the simulator
+exercises the per-link-class contention the plan estimate approximates),
+and the topology's routing summary.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+from repro.chip.config import ChipConfig, ipu_pod4_hbm
+
+
+def topology_sweep(cfg, topologies: Sequence[str], *, batch: int = 32,
+                   seq: int = 2048, designs: Sequence[str] = ("ELK-Full",),
+                   max_orders: int = 4, sim_layers: int = 2,
+                   chip_factory: Callable[..., ChipConfig] = ipu_pod4_hbm,
+                   ) -> list[dict]:
+    from repro.chip.simulator import simulate
+    from repro.core.baselines import build_plan
+    from repro.core.elk import compare_designs
+    from repro.core.graph import build_graph
+    from repro.core.pipeline import CompileContext
+
+    sim_cfg = dataclasses.replace(cfg, num_layers=min(cfg.num_layers,
+                                                      sim_layers))
+    g = build_graph(sim_cfg, batch=batch, seq=seq, phase="decode")
+    rows = []
+    for topo in topologies:
+        chip = chip_factory(topology=topo)
+        ctx = CompileContext(chip)   # curves/windows shared across designs
+        plans = compare_designs(cfg, chip, batch=batch, seq=seq,
+                                phase="decode", designs=tuple(designs),
+                                max_orders=max_orders, ctx=ctx)
+        t = chip.topo
+        for d, p in plans.items():
+            # simulate *this design's* plan on the truncation, so each row
+            # pairs a plan estimate with its own simulated counterpart.
+            # Ideal is a roofline with no preload plans — the simulator
+            # would see zero preload traffic, so no sim column for it.
+            sim = (simulate(build_plan(g, chip, d, max_orders=max_orders,
+                                       ctx=ctx), chip)
+                   if d != "Ideal" else None)
+            rows.append({
+                "topology": topo, "design": d,
+                "latency_ms": round(p.total_time * 1e3, 3),
+                "sim_ms": round(sim.total_time * 1e3, 3) if sim else "",
+                "sim_layers": sim_cfg.num_layers if sim else "",
+                "noc_util": round(p.util.interconnect, 4),
+                "preload_hops": round(t.preload_hops, 2),
+                "delivery_tbps": round(t.preload_delivery_bw / 1e12, 3),
+                "bisection_tbps": round(t.bisection_bw / 1e12, 3),
+                "mean_preload_number": round(p.mean_preload_number, 2),
+            })
+    return rows

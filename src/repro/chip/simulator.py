@@ -1,22 +1,31 @@
 """Event-driven ICCA chip simulator (paper §5 "Simulation framework").
 
-Simulates the execution of an ELK ``ExecutionPlan`` over three contended
+Simulates the execution of an ELK ``ExecutionPlan`` over contended
 resources, independently of the scheduler's own cost estimates:
 
 * **HBM** — serves preloads one at a time in preload order (§4.5 rule 2),
-  gated by on-chip space and MoE routing deps.
-* **NoC** — processor-sharing fluid model over the aggregate interconnect
-  capacity; concurrent flows (preload delivery, data distribution,
-  execution-time rotation) split the capacity, topology hop-weights from
-  ``ChipConfig.noc_occupancy``'s constants.  A flow that gets less rate
-  than it demands stretches its phase — that is exactly the paper's
-  contention ②/③.
+  gated by on-chip space and MoE routing deps; each request pays the
+  chip's per-request ``hbm_latency``.
+* **NoC** — processor-sharing fluid model over the topology's *link
+  classes* (``chip.topo.classes``): flat topologies expose one
+  ``intra`` pool; the hierarchical pod adds a slower ``inter`` tier.
+  Each flow (preload delivery, data distribution, execution-time
+  rotation) carries per-class weighted byte-hops from
+  ``topo.flow_weights``; flows active on a class split that class's
+  capacity, and a flow completes when *every* class it crosses has
+  drained — congestion on one tier stretches only the flows that cross
+  it (the paper's contention ②/③, now per tier).  Transfers additionally
+  pay per-hop ``link_latency`` before bytes start flowing, matching the
+  analytic cost model's ``volume/bw + hops*latency`` vocabulary.
 * **Cores** — execute ops sequentially; an op's execute phase cannot run
-  faster than its rotation traffic allows.
+  faster than its rotation traffic allows.  (Rotation *serial* latency is
+  already inside ``ExecPlan.time`` via ``AnalyticCostModel.rot_time``, so
+  the rotation flow charges contention only.)
 
 Outputs everything Figures 17-24 read: total latency, the Fig-18(a)
 four-way breakdown, HBM/NoC utilization, achieved TFLOPS.  The simulator
-is also the DSE vehicle (§6.4): scale ``ChipConfig`` fields and re-run.
+is also the DSE vehicle (§6.4): scale ``ChipConfig`` fields or swap the
+topology and re-run.
 """
 
 from __future__ import annotations
@@ -34,8 +43,13 @@ _EPS = 1e-12
 @dataclasses.dataclass
 class _Flow:
     kind: str               # "preload" | "dist" | "rot"
-    weighted_bytes: float   # bytes x hop weight remaining
-    demand_rate: float      # bytes/s the phase would consume unconstrained
+    rem: dict               # link-class name -> weighted byte-hops remaining
+    demand: dict            # link-class name -> byte-hops/s drain-rate cap
+    latency: float = 0.0    # per-hop pipeline-fill latency not yet elapsed
+
+    def done(self) -> bool:
+        return self.latency <= _EPS and all(v <= _EPS
+                                            for v in self.rem.values())
 
 
 @dataclasses.dataclass
@@ -51,11 +65,28 @@ def simulate(plan: ExecutionPlan, chip: ChipConfig,
     graph = plan.graph
     n = len(graph.ops)
     hbm_bw = hbm_bw if hbm_bw is not None else chip.hbm_bw
-    cap_noc = chip.noc_capacity
+    topo = chip.topo
+    caps = {lc.name: lc.capacity for lc in topo.classes}
+    cap_total = topo.total_capacity
     cap_mem = chip.usable_sram_per_core
 
     pi = plan.preload_order
     dec = {d.op_idx: d for d in plan.decisions}
+
+    def mk_flow(kind: str, nbytes: float, payload_demand: float,
+                latency: float) -> _Flow:
+        weights = topo.flow_weights(kind)
+        # zero-byte flows keep their class entries: an active phase occupies
+        # its share of each class it maps onto until the phase completes
+        # (processor-sharing semantics inherited from the single-pool model)
+        rem = {c: nbytes * w for c, w in weights.items() if w > 0.0}
+        # demand is in byte-hop units: a payload-bytes/s cap times the hop
+        # weight of the class (so an uncontended transfer drains in
+        # bytes/payload_demand seconds, matching the scheduler estimate)
+        demand = {c: payload_demand * w for c, w in weights.items()
+                  if w > 0.0}
+        return _Flow(kind, rem, demand,
+                     latency if nbytes > 0 else 0.0)
 
     # --- state ----------------------------------------------------------
     t = 0.0
@@ -66,7 +97,7 @@ def simulate(plan: ExecutionPlan, chip: ChipConfig,
     cur = 0                            # next op to execute
     # phases: per entity (hbm preload, executing op) a _Flow or timer
     hbm_flow: Optional[_Flow] = None   # NoC side of the active preload
-    hbm_left = 0.0                     # HBM byte time remaining (s at full bw)
+    hbm_left = 0.0                     # HBM time remaining (s at full bw)
     hbm_op = -1
     exe_flow: Optional[_Flow] = None   # dist or rot flow of current op
     exe_left = 0.0                     # pure-compute seconds remaining
@@ -105,9 +136,13 @@ def simulate(plan: ExecutionPlan, chip: ChipConfig,
                 return
             p = dec[j].preload_plan
             hbm_op = j
-            hbm_left = (p.hbm_bytes / hbm_bw) if (p and hbm_bw) else 0.0
-            w = (p.noc_preload_bytes * chip.preload_hops) if p else 0.0
-            hbm_flow = _Flow("preload", w, chip.preload_noc_bw)
+            # per-request HBM latency + volume roofline (bugfix: the seed
+            # simulator never charged hbm_latency/link_latency at all)
+            hbm_left = ((p.hbm_bytes / hbm_bw + chip.hbm_latency)
+                        if (p and hbm_bw and p.hbm_bytes) else 0.0)
+            nbytes = p.noc_preload_bytes if p else 0.0
+            hbm_flow = mk_flow("preload", nbytes, topo.preload_delivery_bw,
+                               topo.preload_latency)
             space_used += preload_space(j)
             next_pre += 1
             return
@@ -121,8 +156,8 @@ def simulate(plan: ExecutionPlan, chip: ChipConfig,
         space_used += exec_space(cur) - (preload_space(cur))
         if p and p.noc_dist_bytes > 0:
             exe_phase = "dist"
-            exe_flow = _Flow("dist", p.noc_dist_bytes * chip.dist_hops,
-                             cap_noc)
+            exe_flow = mk_flow("dist", p.noc_dist_bytes, math.inf,
+                               topo.dist_latency)
         else:
             _enter_run()
 
@@ -132,7 +167,7 @@ def simulate(plan: ExecutionPlan, chip: ChipConfig,
         exe_phase = "run"
         exe_left = d.exec_plan.time
         rot = d.exec_plan.noc_exec_bytes
-        exe_flow = _Flow("rot", float(rot), cap_noc) if rot else None
+        exe_flow = mk_flow("rot", float(rot), math.inf, 0.0) if rot else None
 
     start_next_preload()
     start_exec()
@@ -153,25 +188,34 @@ def simulate(plan: ExecutionPlan, chip: ChipConfig,
                 if exe_phase == "idle":
                     break
 
-        # processor sharing: flows active on the NoC
+        # per-link-class processor sharing: every active phase occupies its
+        # share of each class it maps onto for the phase's whole lifetime
         flows = [f for f in (hbm_flow, exe_flow) if f is not None]
-        share = cap_noc / max(len(flows), 1)
-        rates = {id(f): min(share, f.demand_rate) for f in flows}
+        nact: dict = {}
+        for f in flows:
+            for c in f.rem:
+                nact[c] = nact.get(c, 0) + 1
+
+        def rate(f: _Flow, c: str) -> float:
+            return min(caps[c] / max(nact.get(c, 1), 1), f.demand[c])
+
+        def flow_dt(f: Optional[_Flow]) -> float:
+            if f is None or f.done():
+                return 0.0
+            drain = 0.0
+            for c, v in f.rem.items():
+                if v > _EPS:
+                    drain = max(drain, v / rate(f, c))
+            return f.latency + drain
 
         # time to next completion event
         dts = []
         if hbm_op >= 0:
-            d_hbm = hbm_left
-            d_noc = (hbm_flow.weighted_bytes / rates[id(hbm_flow)]
-                     if hbm_flow and hbm_flow.weighted_bytes > 0 else 0.0)
-            dts.append(max(d_hbm, d_noc))
+            dts.append(max(hbm_left, flow_dt(hbm_flow)))
         if exe_phase == "dist" and exe_flow:
-            dts.append(exe_flow.weighted_bytes / rates[id(exe_flow)])
+            dts.append(flow_dt(exe_flow))
         elif exe_phase == "run":
-            d_comp = exe_left
-            d_rot = (exe_flow.weighted_bytes / rates[id(exe_flow)]
-                     if exe_flow and exe_flow.weighted_bytes > 0 else 0.0)
-            dts.append(max(d_comp, d_rot))
+            dts.append(max(exe_left, flow_dt(exe_flow)))
         if not dts:
             break
         dt = max(min(dts), 1e-9)
@@ -185,32 +229,43 @@ def simulate(plan: ExecutionPlan, chip: ChipConfig,
             busy_hbm += dt
         elif exe_active:
             busy_exec += dt
+
+        def advance(f: Optional[_Flow]) -> float:
+            if f is None:
+                return 0.0
+            lat = min(f.latency, dt)
+            f.latency -= lat
+            eff = dt - lat
+            served_total = 0.0
+            if eff > 0:
+                for c in list(f.rem):
+                    v = f.rem[c]
+                    if v <= _EPS:
+                        continue
+                    served = min(v, rate(f, c) * eff)
+                    f.rem[c] = v - served
+                    served_total += served
+            return served_total
+
         if hbm_active:
             hbm_left = max(0.0, hbm_left - dt)
-            if hbm_flow:
-                served = rates[id(hbm_flow)] * dt
-                hbm_flow.weighted_bytes = max(
-                    0.0, hbm_flow.weighted_bytes - served)
-                noc_bytes_served += served
-        if exe_active and exe_flow:
-            served = rates[id(exe_flow)] * dt
-            exe_flow.weighted_bytes = max(0.0, exe_flow.weighted_bytes - served)
-            noc_bytes_served += served
+            noc_bytes_served += advance(hbm_flow)
+        if exe_active:
+            noc_bytes_served += advance(exe_flow)
         if exe_phase == "run":
             exe_left = max(0.0, exe_left - dt)
         t += dt
 
         # completions
         if hbm_active and hbm_left <= _EPS and (
-                hbm_flow is None or hbm_flow.weighted_bytes <= _EPS):
+                hbm_flow is None or hbm_flow.done()):
             pre_done[hbm_op] = True
             hbm_op, hbm_flow, hbm_left = -1, None, 0.0
             start_next_preload()
-        if exe_phase == "dist" and exe_flow and \
-                exe_flow.weighted_bytes <= _EPS:
+        if exe_phase == "dist" and exe_flow and exe_flow.done():
             _enter_run()
         elif exe_phase == "run" and exe_left <= _EPS and (
-                exe_flow is None or exe_flow.weighted_bytes <= _EPS):
+                exe_flow is None or exe_flow.done()):
             exe_done[cur] = t
             space_used = max(0.0, space_used - exec_space(cur))
             exe_phase, exe_flow = "idle", None
@@ -225,7 +280,7 @@ def simulate(plan: ExecutionPlan, chip: ChipConfig,
     util = Utilization(
         hbm=min(hbm_bytes / (hbm_bw * total), 1.0) if (hbm_bw and total)
         else 0.0,
-        interconnect=min(noc_bytes_served / (cap_noc * total), 1.0)
+        interconnect=min(noc_bytes_served / (cap_total * total), 1.0)
         if total else 0.0,
         flops=min(flops / (chip.total_flops * total), 1.0) if total else 0.0,
         achieved_tflops=flops / total / 1e12 if total else 0.0,

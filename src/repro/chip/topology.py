@@ -1,0 +1,346 @@
+"""Pluggable interconnect topology models (paper §5 mapping strategies, §6.4).
+
+The paper's second headline claim is that the ICCA simulator enables
+"architecture design space exploration with different interconnect network
+topologies".  This module makes topology a first-class axis: each
+:class:`TopologyModel` owns
+
+* **routing** — per-traffic-class hop weights (``preload`` delivery from the
+  HBM controllers, ``dist`` peer fetches at the preload->execute transition,
+  ``rot`` compute-shift rotation / ring-reduce traffic during execution),
+  HBM-controller placement, and bisection capacity;
+* **link classes** — the contended resource pools the event simulator
+  processor-shares.  Flat topologies expose one ``intra`` class; the
+  hierarchical multi-chip pod adds a distinct, slower ``inter`` tier so
+  congestion on one tier stretches only the flows that cross it;
+* **collective cost shapes** — the serial-time factors the analytic cost
+  model applies to broadcast preload, rotation and distribution transfers,
+  so ELK's plans (not just the simulator) react to topology.
+
+``ChipConfig`` delegates its NoC vocabulary (``noc_capacity``,
+``preload_hops``, ``dist_hops``, ``preload_noc_bw``, ``noc_occupancy``) to
+the model bound by :func:`build_topology`; ``signature()`` feeds the compile
+pipeline's cache keys so curves/windows/plans miss when topology changes.
+
+Numeric compatibility: ``all2all`` and ``mesh2d`` reproduce the pre-refactor
+scalar hop-weight constants exactly (capacity ``N*link`` / ``4N*link``,
+preload hops ``1`` / ``(r+c)/4``, dist hops ``1`` / ``2``, unit serial-time
+factors), so existing plans are bit-identical.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from functools import cached_property, lru_cache
+from typing import TYPE_CHECKING
+
+if TYPE_CHECKING:  # avoid a circular import; chip/config.py imports us
+    from repro.chip.config import ChipConfig
+
+TRAFFIC_CLASSES = ("preload", "dist", "rot")
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkClass:
+    """One contended interconnect tier (fluid capacity pool)."""
+    name: str            # "intra" | "inter"
+    capacity: float      # aggregate bytes/s of the tier
+    hop_latency: float   # per-hop latency on this tier (s)
+
+
+def near_square_grid(n: int) -> tuple[int, int]:
+    """Near-square factorization of ``n`` cores into a 2D grid.
+
+    Prime (and near-prime) ``n`` degenerates to a pencil — ``(1, n)`` or
+    e.g. ``(2, 23)`` — silently inflating ``preload_hops``; whenever the
+    best factorization is worse than 2:1, pad to the nearest count whose
+    grid is at most 2:1 instead (idle grid slots, honest hop counts) and
+    warn.
+    """
+    def factor(m: int) -> tuple[int, int]:
+        r = int(m ** 0.5)
+        while m % r:
+            r -= 1
+        return (r, m // r)
+
+    r, c = factor(n)
+    if c > 2 * r:
+        m = n + 1
+        while True:
+            r, c = factor(m)
+            if r > 1 and c <= 2 * r:
+                break
+            m += 1
+        warnings.warn(
+            f"near-square grid: {n} cores has no near-square "
+            f"factorization; padding to a {r}x{c} grid ({r * c - n} idle "
+            "slots)", stacklevel=2)
+    return (r, c)
+
+
+class TopologyModel:
+    """Base interconnect model bound to one chip's shape.
+
+    Subclasses fill in, from the chip fields captured here:
+
+    * ``classes`` — tuple of :class:`LinkClass` pools;
+    * ``weights`` — ``{traffic kind: {class name: hop weight}}``; a flow of
+      ``B`` bytes of kind ``k`` puts ``B * weights[k][c]`` byte-hops on
+      class ``c``;
+    * ``preload_hops`` / ``dist_hops`` / ``rot_hops`` — scalar summaries
+      (mean hop counts) used for reporting and back-compat;
+    * ``dist_time_factor`` / ``rot_time_factor`` — serial per-core transfer
+      time multipliers on ``volume / link_bw`` (slow-tier crossings);
+    * ``dist_latency_hops`` / ``rot_latency_hops`` — hop counts charged as
+      per-transfer latency by the analytic cost model and the simulator.
+    """
+
+    kind = "base"
+
+    def __init__(self, chip: "ChipConfig"):
+        self.num_cores = chip.num_cores
+        self.num_chips = max(chip.num_chips, 1)
+        self.cores_per_chip = chip.cores_per_chip
+        self.link_bw = chip.link_bw
+        self.link_latency = chip.link_latency
+        self.hbm_controllers = chip.hbm_controllers
+        self.classes: tuple[LinkClass, ...] = ()
+        self.weights: dict[str, dict[str, float]] = {}
+        self.preload_hops = 1.0
+        self.dist_hops = 1.0
+        self.rot_hops = 1.0
+        self.dist_time_factor = 1.0
+        self.rot_time_factor = 1.0
+        self.dist_latency_hops = 1.0
+        self.rot_latency_hops = 1.0
+        self.bisection_bw = 0.0
+
+    # -- interface the compiler core / simulator consume ---------------------
+    # (total_capacity / preload_delivery_bw / signature sit on scheduler and
+    # allocator hot paths — computed once per model, then plain lookups)
+    def flow_weights(self, kind: str) -> dict[str, float]:
+        return self.weights[kind]
+
+    @cached_property
+    def total_capacity(self) -> float:
+        return sum(lc.capacity for lc in self.classes)
+
+    @cached_property
+    def preload_delivery_bw(self) -> float:
+        """Effective HBM-controller->cores delivery bandwidth: the bottleneck
+        link class's capacity diluted by the preload hop weight it carries."""
+        return min(lc.capacity / self.weights["preload"][lc.name]
+                   for lc in self.classes
+                   if self.weights["preload"].get(lc.name, 0.0) > 0.0)
+
+    @cached_property
+    def preload_latency(self) -> float:
+        """Pipeline-fill latency of one broadcast-preload delivery (s)."""
+        return self.preload_hops * self.classes[0].hop_latency
+
+    @cached_property
+    def dist_latency(self) -> float:
+        """Per-transfer latency of one data-distribution fetch (s), summed
+        over the hop latencies of the link classes it crosses."""
+        return self.dist_latency_hops * self.classes[0].hop_latency
+
+    @cached_property
+    def _occ_terms(self) -> tuple:
+        # flattened (1/capacity, rot_w, preload_w, dist_w) per class: the
+        # allocator calls occupancy() per candidate window, so keep it a
+        # few multiplies rather than dict lookups
+        return tuple((1.0 / lc.capacity,
+                      self.weights["rot"].get(lc.name, 0.0),
+                      self.weights["preload"].get(lc.name, 0.0),
+                      self.weights["dist"].get(lc.name, 0.0))
+                     for lc in self.classes)
+
+    def occupancy(self, exec_bytes: float, preload_bytes: float,
+                  dist_bytes: float = 0.0) -> float:
+        """Seconds of capacity consumed by a traffic mix: the bottleneck
+        tier's weighted byte-hops over its capacity (flat topologies reduce
+        to the single-pool ``weighted / noc_capacity`` of the seed model)."""
+        terms = self._occ_terms
+        inv, rw, pw, dw = terms[0]
+        t = (exec_bytes * rw + preload_bytes * pw + dist_bytes * dw) * inv
+        for inv, rw, pw, dw in terms[1:]:
+            t = max(t, (exec_bytes * rw + preload_bytes * pw
+                        + dist_bytes * dw) * inv)
+        return t
+
+    def signature(self) -> tuple:
+        """Hashable identity for compile-pipeline cache keys (memoized)."""
+        sig = self.__dict__.get("_sig")
+        if sig is None:
+            sig = self.__dict__["_sig"] = self._signature()
+        return sig
+
+    def _signature(self) -> tuple:
+        return (self.kind, self.num_cores, self.num_chips, self.link_bw,
+                tuple((lc.name, lc.capacity) for lc in self.classes),
+                tuple(sorted((k, tuple(sorted(w.items())))
+                             for k, w in self.weights.items())),
+                self.dist_time_factor, self.rot_time_factor,
+                self.preload_hops)
+
+
+class All2AllTopology(TopologyModel):
+    """Every core drives one full-bandwidth link at a time (IPU exchange):
+    capacity ``N * link_bw``, every transfer is one hop."""
+
+    kind = "all2all"
+
+    def __init__(self, chip):
+        super().__init__(chip)
+        cap = self.num_cores * self.link_bw
+        self.classes = (LinkClass("intra", cap, self.link_latency),)
+        self.weights = {"preload": {"intra": 1.0},
+                        "dist": {"intra": 1.0},
+                        "rot": {"intra": 1.0}}
+        self.bisection_bw = cap / 2.0
+        self.preload_hops = 1.0
+        self.dist_hops = 1.0
+
+
+class Mesh2DTopology(TopologyModel):
+    """Per-chip 2D mesh, dimension-order routing (paper §6.1): each core
+    talks to up to 4 neighbors simultaneously => capacity ``4N * link_bw``;
+    a transfer consumes one link per hop.  Partition dims map to mesh dims,
+    so rotations are neighbor hops (1) and distribution fetches within a
+    group span ~2 hops; HBM controllers sit on the grid edges, so preload
+    traffic crosses ``(rows+cols)/4`` links on average."""
+
+    kind = "mesh2d"
+
+    def __init__(self, chip):
+        super().__init__(chip)
+        r, c = chip.mesh_shape
+        self.grid = (r, c)
+        cap = 4 * self.num_cores * self.link_bw
+        self.classes = (LinkClass("intra", cap, self.link_latency),)
+        self.preload_hops = max((r + c) / 4.0, 1.0)
+        self.dist_hops = 2.0
+        self.weights = {"preload": {"intra": self.preload_hops},
+                        "dist": {"intra": self.dist_hops},
+                        "rot": {"intra": 1.0}}
+        self.bisection_bw = min(r, c) * self.link_bw * self.num_chips
+
+    def _signature(self) -> tuple:
+        return super()._signature() + (self.grid,)
+
+
+class Torus2DTopology(Mesh2DTopology):
+    """Mesh2D with wraparound links: the same 4 links per core, but mean
+    routing distances halve (preload crosses ``(r+c)/8``, distribution
+    ~1.5 hops) and the bisection doubles.  Rotation stays a true ring of
+    neighbor hops, so at equal ``link_bw`` torus rotation time is never
+    worse than mesh."""
+
+    kind = "torus2d"
+
+    def __init__(self, chip):
+        super().__init__(chip)
+        r, c = self.grid
+        self.preload_hops = max((r + c) / 8.0, 1.0)
+        self.dist_hops = 1.5
+        self.weights = {"preload": {"intra": self.preload_hops},
+                        "dist": {"intra": self.dist_hops},
+                        "rot": {"intra": 1.0}}
+        self.bisection_bw = 2 * min(r, c) * self.link_bw * self.num_chips
+
+
+class RingTopology(TopologyModel):
+    """Per-chip bidirectional ring: two links per core => capacity
+    ``2N * link_bw``.  HBM controllers are spaced evenly around the ring,
+    so broadcast preload travels ``cores_per_chip / (4 * controllers)``
+    hops on average — rings scale poorly for delivery, which is the point
+    of including one in the DSE sweep.  Rotation is the natural fit (ring
+    neighbors), distribution crosses ~4 hops."""
+
+    kind = "ring"
+
+    def __init__(self, chip):
+        super().__init__(chip)
+        cap = 2 * self.num_cores * self.link_bw
+        self.classes = (LinkClass("intra", cap, self.link_latency),)
+        ctrl_per_chip = max(self.hbm_controllers // self.num_chips, 1)
+        self.preload_hops = max(
+            self.cores_per_chip / (4.0 * ctrl_per_chip), 1.0)
+        self.dist_hops = 4.0
+        self.dist_time_factor = 2.0
+        self.dist_latency_hops = 2.0
+        self.weights = {"preload": {"intra": self.preload_hops},
+                        "dist": {"intra": self.dist_hops},
+                        "rot": {"intra": 1.0}}
+        self.bisection_bw = 2 * self.link_bw * self.num_chips
+
+
+class HierPodTopology(TopologyModel):
+    """Hierarchical multi-chip pod: each chip is all2all internally
+    (``intra`` class, per-chip HBM controllers => preload never leaves the
+    chip) while chips connect through a distinct, slower ``inter`` tier of
+    ``inter_links_per_chip`` gateway links per chip at
+    ``inter_bw_ratio * link_bw`` each.  Distribution fetches peers
+    uniformly, so ``(num_chips-1)/num_chips`` of that traffic crosses the
+    thin tier; a rotation ring laid out chip-contiguously crosses it only
+    ``num_chips / num_cores`` of the time.  Serial transfer times stretch
+    by the harmonic blend of the two tiers' speeds."""
+
+    kind = "hier_pod"
+
+    def __init__(self, chip):
+        super().__init__(chip)
+        ratio = chip.inter_bw_ratio
+        intra_cap = self.num_cores * self.link_bw
+        inter_cap = (self.num_chips * chip.inter_links_per_chip
+                     * self.link_bw * ratio)
+        self.classes = (LinkClass("intra", intra_cap, self.link_latency),
+                        LinkClass("inter", inter_cap, 4 * self.link_latency))
+        fi = (self.num_chips - 1) / self.num_chips if self.num_chips > 1 \
+            else 0.0
+        fr = min(1.0, self.num_chips / self.num_cores) if self.num_chips > 1 \
+            else 0.0
+        self.frac_dist_inter = fi
+        self.frac_rot_inter = fr
+        self.preload_hops = 1.0
+        self.dist_hops = 1.0 + fi
+        self.dist_time_factor = (1.0 - fi) + fi / ratio
+        self.rot_time_factor = (1.0 - fr) + fr / ratio
+        self.weights = {"preload": {"intra": 1.0},
+                        "dist": {"intra": 1.0, "inter": fi},
+                        "rot": {"intra": 1.0, "inter": fr}}
+        self.bisection_bw = inter_cap / 2.0 if self.num_chips > 1 \
+            else intra_cap / 2.0
+
+    @cached_property
+    def dist_latency(self) -> float:
+        # one intra hop to the gateway + one (slower) inter-chip hop
+        by = {lc.name: lc.hop_latency for lc in self.classes}
+        return by["intra"] + by["inter"]
+
+    def _signature(self) -> tuple:
+        return super()._signature() + (self.frac_dist_inter,
+                                       self.frac_rot_inter)
+
+
+TOPOLOGIES: dict[str, type[TopologyModel]] = {
+    cls.kind: cls for cls in (All2AllTopology, Mesh2DTopology,
+                              Torus2DTopology, RingTopology,
+                              HierPodTopology)
+}
+
+
+@lru_cache(maxsize=256)
+def _build(chip: "ChipConfig") -> TopologyModel:
+    try:
+        cls = TOPOLOGIES[chip.topology]
+    except KeyError:
+        raise KeyError(f"unknown topology {chip.topology!r}; known: "
+                       f"{sorted(TOPOLOGIES)}") from None
+    return cls(chip)
+
+
+def build_topology(chip: "ChipConfig") -> TopologyModel:
+    """The (memoized) TopologyModel bound to a chip's shape."""
+    return _build(chip)

@@ -65,6 +65,28 @@ class AnalyticCostModel:
         c = self.chip
         return volume / c.link_bw + hops * rounds * c.link_latency
 
+    def rot_time(self, volume: int, rounds: int = 1) -> float:
+        """Compute-shift rotation / ring-reduce transfer time for one core's
+        exec-phase traffic.  Topology-aware: crossings of a slower link tier
+        stretch the serial time by ``rot_time_factor`` (1.0 on flat
+        topologies, reproducing the plain per-link model)."""
+        if volume <= 0:
+            return 0.0
+        c = self.chip
+        topo = c.topo
+        return (volume * topo.rot_time_factor / c.link_bw
+                + topo.rot_latency_hops * max(rounds, 1) * c.link_latency)
+
+    def dist_time(self, volume: int) -> float:
+        """Data-distribution (preload->execute state) fetch time for one
+        core, with the topology's slow-tier blend and the per-hop latency
+        of every link class the fetch crosses."""
+        if volume <= 0:
+            return 0.0
+        c = self.chip
+        topo = c.topo
+        return volume * topo.dist_time_factor / c.link_bw + topo.dist_latency
+
     def hbm_time(self, volume: int) -> float:
         c = self.chip
         if c.hbm_bw <= 0:

@@ -185,12 +185,10 @@ def enumerate_exec_plans(op: Op, chip: ChipConfig,
                 continue
             t_tile = cost.tile_time(op.kind, tile_dims, tile_flops,
                                     read_bytes, chunks=max(r, 1) + rounds)
-            hops = 1
-            if chip.topology == "mesh2d":
-                # compute-shift rotations are neighbor transfers on a mesh
-                hops = 1
-            t_rot = cost.link_time(remote_per_core, hops=hops,
-                                   rounds=max(rounds, 1)) if remote_per_core else 0.0
+            # topology-aware rotation cost: neighbor transfers on flat
+            # topologies, stretched by slow-tier crossings on hierarchical
+            # ones (cost_model delegates to chip.topo)
+            t_rot = cost.rot_time(remote_per_core, rounds=max(rounds, 1))
             if chip.sram_port_blocking and remote_per_core:
                 # footnote 2: remote reads pause local execution
                 t_tile += remote_per_core / chip.sram_bw_per_core
@@ -268,6 +266,6 @@ def enumerate_preload_plans(op: Op, exec_plan: ExecPlan, chip: ChipConfig,
             missing = max(0.0, need - ff)
             dist_vol_per_core += int(tb * missing)
             noc_dist += int(tb * missing) * used
-        t_dist = cost.link_time(dist_vol_per_core) if dist_vol_per_core else 0.0
+        t_dist = cost.dist_time(dist_vol_per_core) if dist_vol_per_core else 0.0
         out.append(PreloadPlan(f, space, t_dist, noc_dist, noc_pre, hbm_bytes))
     return _pareto(out, lambda p: p.dist_time, lambda p: p.space)

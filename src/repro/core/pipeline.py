@@ -64,6 +64,10 @@ class PlanCurveCache:
     def __init__(self, chip: ChipConfig, cost: Optional[AnalyticCostModel] = None):
         self.chip = chip
         self.cost = cost or AnalyticCostModel(chip)
+        # curves depend on topology through rotation/distribution costs;
+        # the signature in every key makes a topology change miss even if a
+        # cache instance were ever shared across chips
+        self._topo_sig = chip.topo_signature
         self.hits = 0
         self.misses = 0
         self._exec: dict = {}        # sig -> [ExecPlan]
@@ -81,7 +85,7 @@ class PlanCurveCache:
         return self._uids.get(id(plans))
 
     def exec_plans(self, op) -> list:
-        sig = op_curve_signature(op)
+        sig = (op_curve_signature(op), self._topo_sig)
         got = self._exec.get(sig)
         if got is None:
             self.misses += 1
@@ -93,7 +97,7 @@ class PlanCurveCache:
 
     def exec_plans_capped(self, op, cap: int) -> list:
         """The Static/capped baselines' single fastest-fitting plan."""
-        sig = (op_curve_signature(op), "cap", cap)
+        sig = (op_curve_signature(op), self._topo_sig, "cap", cap)
         got = self._derived.get(sig)
         if got is None:
             self.misses += 1
@@ -106,7 +110,7 @@ class PlanCurveCache:
         return got
 
     def preload_plans(self, op, exec_plan) -> list:
-        sig = (op_curve_signature(op), exec_plan.key())
+        sig = (op_curve_signature(op), self._topo_sig, exec_plan.key())
         got = self._pre.get(sig)
         if got is None:
             self.misses += 1
@@ -118,7 +122,8 @@ class PlanCurveCache:
 
     def preload_plans_static(self, op, exec_plan, first: bool) -> list:
         """Static baseline: the max- or min-footprint plan only."""
-        sig = (op_curve_signature(op), exec_plan.key(), "static", first)
+        sig = (op_curve_signature(op), self._topo_sig, exec_plan.key(),
+               "static", first)
         got = self._derived.get(sig)
         if got is None:
             self.misses += 1
@@ -262,7 +267,8 @@ def compile_pipeline(cfg: ModelConfig, chip: ChipConfig, *, batch: int,
         # plan-cache keys don't encode the cost model; a context with a
         # custom one must not poison (or read) default-cost entries
         cache = False
-    key = (cfg, chip, batch, seq, phase, design, max_exact_ops, max_orders)
+    key = (cfg, chip, chip.topo_signature, batch, seq, phase, design,
+           max_exact_ops, max_orders)
     if cache:
         hit = _PLAN_CACHE.get(key)
         if hit is not None:
@@ -290,7 +296,8 @@ def compile_pipeline(cfg: ModelConfig, chip: ChipConfig, *, batch: int,
 
 def _exact_plan(cfg, chip, batch, seq, phase, design, max_orders, ctx,
                 cache, parallel) -> ExecutionPlan:
-    key = (cfg, chip, batch, seq, phase, design, "exact", max_orders)
+    key = (cfg, chip, chip.topo_signature, batch, seq, phase, design,
+           "exact", max_orders)
     if cache:
         hit = _PLAN_CACHE.get(key)
         if hit is not None:

@@ -79,6 +79,9 @@ class Scheduler:
         self.exec_space_cap = exec_space_cap
         self.static_preload_frac = static_preload_frac
         self.exec_fastest = exec_fastest
+        # invariant per chip; cached off the property hot paths
+        self._topo_sig = chip.topo_signature
+        self._preload_bw = chip.preload_noc_bw
         self.curves = [self._curves(op) for op in graph.ops]
         self._pre_memo: dict = {}
 
@@ -115,7 +118,9 @@ class Scheduler:
             if uid is None:
                 return None
             parts.append((uid, it.fixed, it.fixed_choice))
-        return (cap, tuple(parts))
+        # topology signature: window costs fold in topology hop weights, so
+        # a topology change must miss (contexts are per-chip, but be explicit)
+        return (cap, self._topo_sig, tuple(parts))
 
     # -- main entry -----------------------------------------------------------
     def schedule(self, preload_order: Optional[Sequence[int]] = None,
@@ -260,7 +265,7 @@ class Scheduler:
         pre = self._pre_curve(j, exec_choice[j])
         plan = pre[-1]  # minimum-space estimate; finalization refines
         t_hbm = self.cost.hbm_time(plan.hbm_bytes)
-        t_noc = plan.noc_preload_bytes / self.chip.preload_noc_bw
+        t_noc = plan.noc_preload_bytes / self._preload_bw
         return max(t_hbm, t_noc)
 
     # -- finalization ----------------------------------------------------------
@@ -335,6 +340,7 @@ class Scheduler:
                 idx += 1
             blocker_of[m] = b
 
+        pre_bw = self._preload_bw
         hbm_free = 0.0
         for m in range(n):
             j = pi[m]
@@ -345,7 +351,7 @@ class Scheduler:
             t_start = max(hbm_free, t_blocked, t_dep)
             plan = bound_pre[j]
             lpre = max(self.cost.hbm_time(plan.hbm_bytes),
-                       plan.noc_preload_bytes / chip.preload_noc_bw)
+                       plan.noc_preload_bytes / pre_bw)
             timing[j].t_s_pre = t_start
             timing[j].t_e_pre = t_start + lpre
             hbm_free = timing[j].t_e_pre
@@ -372,7 +378,7 @@ class Scheduler:
                 t_start = max(hbm_free, t_blocked, t_dep)
                 plan = bound_pre[j]
                 lpre = max(self.cost.hbm_time(plan.hbm_bytes),
-                           plan.noc_preload_bytes / chip.preload_noc_bw)
+                           plan.noc_preload_bytes / pre_bw)
                 timing[j].t_s_pre = t_start
                 timing[j].t_e_pre = t_start + lpre
                 hbm_free = timing[j].t_e_pre

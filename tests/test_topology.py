@@ -1,0 +1,264 @@
+"""Tests for the pluggable interconnect topology subsystem (DESIGN.md §5).
+
+Covers: per-topology hop-count/bisection invariants, numeric back-compat of
+the all2all/mesh2d scalar vocabulary, the prime-core-count mesh fallback,
+simulator flow conservation and latency charging, torus-vs-mesh
+monotonicity, topology-keyed pipeline cache misses, and topology-aware
+compiler decisions.
+"""
+
+import dataclasses
+import warnings
+
+import pytest
+
+from repro.chip.config import ChipConfig, KB, ipu_pod4_hbm
+from repro.chip.simulator import simulate
+from repro.chip.topology import TOPOLOGIES, near_square_grid
+from repro.configs import get_config
+from repro.core.baselines import build_plan
+from repro.core.cost_model import AnalyticCostModel
+from repro.core.elk import compile_model
+from repro.core.graph import build_graph
+from repro.core.pipeline import clear_plan_cache, plan_cache
+
+ALL_TOPOLOGIES = ("all2all", "mesh2d", "torus2d", "ring", "hier_pod")
+
+
+def chip_for(topo: str) -> ChipConfig:
+    return ipu_pod4_hbm(topology=topo)
+
+
+@pytest.fixture(scope="module")
+def small_cfg():
+    return dataclasses.replace(get_config("llama2_13b"), num_layers=2)
+
+
+@pytest.fixture(scope="module")
+def small_graph(small_cfg):
+    return build_graph(small_cfg, batch=32, seq=2048, phase="decode")
+
+
+# ---------------------------------------------------------------------------
+# per-topology invariants
+# ---------------------------------------------------------------------------
+
+class TestTopologyInvariants:
+    @pytest.mark.parametrize("topo", ALL_TOPOLOGIES)
+    def test_registry_and_basic_invariants(self, topo):
+        chip = chip_for(topo)
+        t = chip.topo
+        assert TOPOLOGIES[topo] is type(t)
+        assert t.preload_hops >= 1.0
+        assert t.total_capacity > 0
+        assert t.bisection_bw > 0
+        assert t.preload_delivery_bw <= t.total_capacity + 1e-6
+        names = {lc.name for lc in t.classes}
+        for kind in ("preload", "dist", "rot"):
+            assert set(t.flow_weights(kind)) <= names
+        # occupancy is bottleneck-based and scales linearly
+        occ = t.occupancy(1e9, 1e9, 1e9)
+        assert occ > 0
+        assert t.occupancy(2e9, 2e9, 2e9) == pytest.approx(2 * occ)
+
+    @pytest.mark.parametrize("topo", ALL_TOPOLOGIES)
+    def test_signatures_distinct_and_stable(self, topo):
+        chip = chip_for(topo)
+        assert chip.topo_signature == chip_for(topo).topo_signature
+        others = [chip_for(o).topo_signature for o in ALL_TOPOLOGIES
+                  if o != topo]
+        assert chip.topo_signature not in others
+
+    def test_all2all_mesh2d_backcompat_constants(self):
+        """The seed model's scalar hop-weight vocabulary, bit-for-bit."""
+        a = chip_for("all2all")
+        assert a.noc_capacity == a.num_cores * a.link_bw
+        assert a.preload_hops == 1.0
+        assert a.dist_hops == 1.0
+        assert a.preload_noc_bw == a.noc_capacity
+        assert a.noc_occupancy(3e9, 5e9, 7e9) == pytest.approx(
+            (3e9 + 5e9 + 7e9) / a.noc_capacity)
+        m = chip_for("mesh2d")
+        r, c = m.mesh_shape
+        assert m.noc_capacity == 4 * m.num_cores * m.link_bw
+        assert m.preload_hops == max((r + c) / 4.0, 1.0)
+        assert m.dist_hops == 2.0
+        assert m.preload_noc_bw == m.noc_capacity / m.preload_hops
+        assert m.noc_occupancy(3e9, 5e9, 7e9) == pytest.approx(
+            (3e9 + 5e9 * m.preload_hops + 7e9 * 2.0) / m.noc_capacity)
+
+    def test_unknown_topology_rejected_at_construction(self):
+        with pytest.raises(ValueError, match="unknown topology"):
+            ipu_pod4_hbm(topology="hypercube")
+
+    def test_hier_pod_rejects_degenerate_inter_tier(self):
+        with pytest.raises(ValueError, match="inter_bw_ratio"):
+            chip_for("hier_pod").scaled(inter_bw_ratio=0.0)
+        with pytest.raises(ValueError, match="inter_bw_ratio"):
+            chip_for("hier_pod").scaled(inter_links_per_chip=0)
+        # harmless on flat topologies, caught when switching to hier_pod
+        flat = chip_for("all2all").scaled(inter_bw_ratio=0.0)
+        with pytest.raises(ValueError):
+            flat.scaled(topology="hier_pod")
+
+    def test_hier_pod_has_distinct_slower_inter_tier(self):
+        t = chip_for("hier_pod").topo
+        by_name = {lc.name: lc for lc in t.classes}
+        assert set(by_name) == {"intra", "inter"}
+        assert by_name["inter"].capacity < by_name["intra"].capacity
+        assert by_name["inter"].hop_latency > by_name["intra"].hop_latency
+        # preload stays on-chip; distribution crosses the thin tier
+        assert "inter" not in t.flow_weights("preload")
+        assert t.flow_weights("dist")["inter"] > 0
+        assert t.dist_time_factor > 1.0
+        # the slower inter hop latency is consumed by distribution costs
+        assert t.dist_latency == pytest.approx(
+            by_name["intra"].hop_latency + by_name["inter"].hop_latency)
+        assert t.dist_latency > chip_for("all2all").topo.dist_latency
+
+
+# ---------------------------------------------------------------------------
+# torus <= mesh monotonicity at equal link_bw
+# ---------------------------------------------------------------------------
+
+class TestTorusVsMesh:
+    def test_routing_and_bisection(self):
+        mesh, torus = chip_for("mesh2d").topo, chip_for("torus2d").topo
+        assert torus.preload_hops <= mesh.preload_hops
+        assert torus.dist_hops <= mesh.dist_hops
+        assert torus.bisection_bw == pytest.approx(2 * mesh.bisection_bw)
+        assert torus.preload_delivery_bw >= mesh.preload_delivery_bw
+
+    def test_rotation_and_occupancy_monotone(self):
+        mesh, torus = chip_for("mesh2d"), chip_for("torus2d")
+        cm, ct = AnalyticCostModel(mesh), AnalyticCostModel(torus)
+        for vol in (64 * KB, 4096 * KB):
+            assert ct.rot_time(vol, rounds=3) <= cm.rot_time(vol, rounds=3)
+            assert ct.dist_time(vol) <= cm.dist_time(vol)
+        assert torus.noc_occupancy(1e9, 1e9, 1e9) <= \
+            mesh.noc_occupancy(1e9, 1e9, 1e9)
+
+
+# ---------------------------------------------------------------------------
+# mesh_shape prime fallback
+# ---------------------------------------------------------------------------
+
+class TestNearSquareGrid:
+    def test_composite_untouched(self):
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")
+            assert near_square_grid(1472) == (32, 46)
+            assert near_square_grid(12) == (3, 4)
+            assert near_square_grid(1) == (1, 1)
+
+    @pytest.mark.parametrize("n", (23, 46, 97, 5881))
+    def test_degenerate_pads_to_composite_and_warns(self, n):
+        """Primes and 2*prime pencils alike: anything worse than 2:1 pads."""
+        with pytest.warns(UserWarning, match="padding"):
+            r, c = near_square_grid(n)
+        assert r > 1 and c <= 2 * r and r * c >= n
+
+    def test_prime_core_count_mesh_not_degenerate(self):
+        chip = ipu_pod4_hbm(topology="mesh2d").scaled(num_cores=23 * 4)
+        with pytest.warns(UserWarning, match="padding"):
+            r, c = chip.mesh_shape
+        assert (r, c) == (4, 6)
+        # padded grid keeps preload_hops far below the (1, 23) pencil's
+        assert chip.preload_hops < (1 + 23) / 4.0
+
+
+# ---------------------------------------------------------------------------
+# simulator: flow conservation + latency charging
+# ---------------------------------------------------------------------------
+
+class TestSimulator:
+    @pytest.mark.parametrize("topo", ("all2all", "torus2d", "hier_pod"))
+    def test_breakdown_components_sum_to_total(self, small_graph, topo):
+        chip = chip_for(topo)
+        plan = build_plan(small_graph, chip, "ELK-Dyn")
+        sim = simulate(plan, chip)
+        bd = sim.breakdown
+        assert bd.total == pytest.approx(sim.total_time, rel=1e-9)
+        assert sim.total_time > 0
+        assert 0.0 <= sim.util.interconnect <= 1.0
+        assert 0.0 <= sim.util.hbm <= 1.0
+
+    def test_latencies_charged_to_flows(self, small_graph):
+        """Bugfix: per-request hbm_latency and per-hop link_latency stretch
+        the simulated schedule (the seed simulator ignored both)."""
+        base = chip_for("all2all")
+        zero = base.scaled(link_latency=0.0, hbm_latency=0.0)
+        slow = base.scaled(link_latency=5e-6, hbm_latency=20e-6)
+        plan = build_plan(small_graph, zero, "ELK-Dyn")
+        t_zero = simulate(plan, zero).total_time
+        t_base = simulate(plan, base).total_time
+        t_slow = simulate(plan, slow).total_time
+        assert t_zero < t_base < t_slow
+        # at least the critical-path preload's request latency shows up
+        assert t_slow - t_zero >= 20e-6
+
+    def test_hier_pod_inter_tier_stretches_crossing_flows(self, small_graph):
+        """Per-link-class contention: shrinking only the inter tier must not
+        speed anything up, and a starved tier slows the pod down."""
+        base = chip_for("hier_pod")
+        thin = base.scaled(inter_bw_ratio=0.01)
+        plan = build_plan(small_graph, base, "ELK-Dyn")
+        t_base = simulate(plan, base).total_time
+        t_thin = simulate(plan, thin).total_time
+        assert t_thin >= t_base
+
+
+# ---------------------------------------------------------------------------
+# pipeline caches miss on topology change; plans react to topology
+# ---------------------------------------------------------------------------
+
+class TestTopologyCaching:
+    def test_plan_cache_misses_on_topology_change(self, small_cfg):
+        clear_plan_cache()
+        kw = dict(batch=32, seq=2048, phase="decode", design="Basic")
+        a = compile_model(small_cfg, chip_for("all2all"), **kw)
+        misses_after_first = plan_cache().misses
+        b = compile_model(small_cfg, chip_for("torus2d"), **kw)
+        assert plan_cache().misses > misses_after_first
+        assert a is not b
+        # same-chip recompile still hits
+        assert compile_model(small_cfg, chip_for("torus2d"), **kw) is b
+
+    def test_topology_signature_distinguishes_parameter_changes(self):
+        base = chip_for("hier_pod")
+        assert base.topo_signature != \
+            base.scaled(inter_bw_ratio=0.5).topo_signature
+        assert base.topo_signature != \
+            base.scaled(link_bw=2 * base.link_bw).topo_signature
+
+    def test_elk_decisions_react_to_topology(self, small_cfg):
+        """The compiler core — not just the simulator — is topology-aware:
+        the same model under two topologies picks different preload or
+        rotation (exec-plan) decisions."""
+        plans = {
+            topo: compile_model(small_cfg, chip_for(topo), batch=32,
+                                seq=2048, phase="decode", design="ELK-Dyn",
+                                cache=False)
+            for topo in ("all2all", "ring")
+        }
+        a, r = plans["all2all"], plans["ring"]
+        assert a.total_time != r.total_time
+
+        def decision_keys(p):
+            return [(d.exec_plan.key(),
+                     d.preload_plan.frac if d.preload_plan else None)
+                    for d in p.decisions]
+
+        assert decision_keys(a) != decision_keys(r)
+
+    def test_topology_latencies_distinct_and_ordered(self, small_cfg):
+        """>= 2 new topologies produce distinct latencies, ordered by their
+        delivery bandwidth story: all2all <= torus2d <= mesh2d <= ring."""
+        lat = {}
+        for topo in ("all2all", "torus2d", "mesh2d", "ring"):
+            p = compile_model(small_cfg, chip_for(topo), batch=32, seq=2048,
+                              phase="decode", design="ELK-Dyn", cache=False)
+            lat[topo] = p.total_time
+        assert lat["all2all"] <= lat["torus2d"] <= lat["mesh2d"] \
+            <= lat["ring"]
+        assert len({round(v, 12) for v in lat.values()}) >= 3
