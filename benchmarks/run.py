@@ -48,6 +48,61 @@ def bench_compile(quick: bool = False) -> None:
     print("wrote BENCH_compile.json")
 
 
+def bench_serve(quick: bool = False) -> None:
+    """Static vs continuous batching on a mixed-length request trace ->
+    BENCH_serve.json (tok/s + p50/p99 request latency).
+
+    Smoke-scale on purpose (CPU CI): what's measured is the *scheduling*
+    delta — the lock-step batch pays padded prefill and the batch-max step
+    count while continuous batching refills finished slots — not kernel
+    speed.  The continuous path's per-request outputs are bit-identical to
+    unpadded lock-step ``generate`` (tests/test_serve_batcher.py); the
+    static baseline is a cost model of padded lock-step serving, so the
+    comparison is equal scheduled work, not equal token streams.
+    """
+    import jax
+
+    from repro.configs import get_smoke_config
+    from repro.launch.mesh import make_local_mesh
+    from repro.models import transformer as tfm
+    from repro.serve.batcher import (ContinuousBatcher, make_trace,
+                                     run_static_trace, summarize)
+    from repro.serve.engine import ServeConfig, ServeEngine
+
+    n = 12 if quick else 24
+    cfg = get_smoke_config("qwen3_14b")
+    mesh = make_local_mesh()
+    params = tfm.init_params(jax.random.PRNGKey(0), cfg)
+    out: dict = {"arch": "qwen3_14b (smoke)", "requests": n, "modes": {}}
+    for mode in ("gspmd",) if quick else ("gspmd", "elk_stream"):
+        eng = ServeEngine(cfg, mesh, params, ServeConfig(
+            batch=4, cache_capacity=64, mode=mode, prefill_chunk=16))
+        trace = make_trace(n, vocab_size=cfg.vocab_size)
+        warm = make_trace(4, vocab_size=cfg.vocab_size, seed=1)
+        ContinuousBatcher(eng).run(warm)
+        run_static_trace(eng, warm)
+
+        t0 = time.perf_counter()
+        cont = ContinuousBatcher(eng).run(trace)
+        cont_stats = summarize(cont, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        static = run_static_trace(eng, trace)
+        static_stats = summarize(static, time.perf_counter() - t0)
+        out["modes"][mode] = {"continuous": cont_stats,
+                              "static": static_stats}
+        speedup = (cont_stats["gen_tok_s"]
+                   / max(static_stats["gen_tok_s"], 1e-9))
+        out["modes"][mode]["continuous_speedup"] = round(speedup, 3)
+        print(f"  {mode:10s} static={static_stats['gen_tok_s']:8.1f} tok/s "
+              f"p99={static_stats['p99_latency_s']:.3f}s | "
+              f"continuous={cont_stats['gen_tok_s']:8.1f} tok/s "
+              f"p99={cont_stats['p99_latency_s']:.3f}s "
+              f"({speedup:.2f}x)")
+    with open("BENCH_serve.json", "w") as f:
+        json.dump(out, f, indent=1)
+    print("wrote BENCH_serve.json")
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--quick", action="store_true",
@@ -63,6 +118,7 @@ def main(argv=None) -> None:
 
     sections = [
         ("bench_compile", lambda: bench_compile(quick)),
+        ("bench_serve", lambda: bench_serve(quick)),
         ("fig12_costmodel", paper_figs.fig12_costmodel),
         ("fig16_compile_time", paper_figs.fig16_compile_time),
         ("fig17_latency", paper_figs.fig17_latency),
@@ -79,7 +135,7 @@ def main(argv=None) -> None:
         ("multipod_table", roofline.multi_pod_table),
     ]
     if args.section:
-        aliases = {"compile": "bench_compile"}
+        aliases = {"compile": "bench_compile", "serve": "bench_serve"}
         wanted = {aliases.get(s, s) for s in args.section}
         known = {name for name, _ in sections}
         unknown = wanted - known
@@ -88,8 +144,9 @@ def main(argv=None) -> None:
                      f"known: {sorted(known)}")
         sections = [s for s in sections if s[0] in wanted]
     elif quick:
-        keep = {"bench_compile", "fig12_costmodel", "fig18_breakdown",
-                "fig24_topology", "validate_paper", "roofline_table"}
+        keep = {"bench_compile", "bench_serve", "fig12_costmodel",
+                "fig18_breakdown", "fig24_topology", "validate_paper",
+                "roofline_table"}
         sections = [s for s in sections if s[0] in keep]
 
     failed = []

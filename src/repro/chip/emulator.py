@@ -78,13 +78,19 @@ def emulate_matmul_plan(x: jax.Array, w: jax.Array, plan: ExecPlan,
 
 def check_plan_numerics(plan: ExecPlan, preload: PreloadPlan | None = None,
                         m: int = 64, n: int = 48, k: int = 32,
-                        seed: int = 0, atol: float = 2e-2) -> float:
-    """Random (m,k)@(k,n) under the plan vs jnp reference; returns max err."""
+                        seed: int = 0, rtol: float = 2e-2) -> float:
+    """Random (m,k)@(k,n) under the plan vs jnp reference; returns max err.
+
+    ``rtol`` is relative to the reference magnitude: the check is
+    ``max|got - ref| <= rtol * (max|ref| + 1)``."""
     kx, kw = jax.random.split(jax.random.PRNGKey(seed))
     x = jax.random.normal(kx, (m, k), jnp.float32)
     w = jax.random.normal(kw, (k, n), jnp.float32)
     got = emulate_matmul_plan(x, w, plan, preload)
     ref = x @ w
     err = float(jnp.max(jnp.abs(got - ref)))
-    assert err <= atol * float(jnp.max(jnp.abs(ref)) + 1.0), err
+    bound = rtol * float(jnp.max(jnp.abs(ref)) + 1.0)
+    assert err <= bound, (
+        f"plan dataflow diverges from reference: max abs err {err:.3e} > "
+        f"rtol*max|ref| bound {bound:.3e}")
     return err

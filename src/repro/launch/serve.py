@@ -1,12 +1,21 @@
 """Serving launcher: batched generation with the ELK streaming engine.
 
+Lock-step batch:
+
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-14b --smoke \
       --mode elk_stream --batch 4 --steps 16
+
+Continuous batching over a mixed-length request trace (tok/s + request
+latency percentiles, optionally against the static-batching baseline):
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-14b --smoke \
+      --trace 16 --compare-static
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -15,6 +24,34 @@ from repro.configs import ARCH_IDS, canonical, get_config, get_smoke_config
 from repro.launch.mesh import make_local_mesh, make_production_mesh
 from repro.models import transformer as tfm
 from repro.serve.engine import ServeConfig, ServeEngine, elk_serve_config
+
+
+def _run_trace(eng: ServeEngine, args, vocab: int) -> dict:
+    from repro.serve.batcher import (ContinuousBatcher, make_trace,
+                                     run_static_trace, summarize)
+
+    trace = make_trace(args.trace, vocab_size=vocab,
+                       arrival_spacing_s=args.arrival_spacing,
+                       seed=args.trace_seed)
+    # warm the compile caches so the numbers are steady-state serving
+    warm = make_trace(min(4, args.trace), vocab_size=vocab,
+                      seed=args.trace_seed + 1)
+    ContinuousBatcher(eng).run(warm)
+
+    t0 = time.perf_counter()
+    completions = ContinuousBatcher(eng).run(trace)
+    stats = {"continuous": summarize(completions,
+                                     time.perf_counter() - t0)}
+    order = [c.rid for c in completions]
+    print(f"continuous: {stats['continuous']}  finish order: {order}")
+
+    if args.compare_static:
+        run_static_trace(eng, warm)
+        t0 = time.perf_counter()
+        static = run_static_trace(eng, trace)
+        stats["static"] = summarize(static, time.perf_counter() - t0)
+        print(f"static:     {stats['static']}")
+    return stats
 
 
 def main() -> None:
@@ -33,6 +70,17 @@ def main() -> None:
     ap.add_argument("--prefetch-depth", type=int, default=0,
                     help="0 = ask the ELK scheduler (core.integration)")
     ap.add_argument("--production-mesh", action="store_true")
+    ap.add_argument("--trace", type=int, default=0, metavar="N",
+                    help="serve N mixed-length requests with continuous "
+                         "batching instead of one lock-step batch")
+    ap.add_argument("--trace-seed", type=int, default=0)
+    ap.add_argument("--arrival-spacing", type=float, default=0.0,
+                    help="seconds between request arrivals in --trace mode")
+    ap.add_argument("--compare-static", action="store_true",
+                    help="also run the static-batching baseline on the "
+                         "same trace")
+    ap.add_argument("--json-out", default="",
+                    help="write --trace stats to this JSON file")
     args = ap.parse_args()
 
     arch = canonical(args.arch)
@@ -41,10 +89,13 @@ def main() -> None:
             else make_local_mesh())
 
     if args.prefetch_depth <= 0 and args.mode == "elk_stream":
-        scfg = elk_serve_config(get_config(arch), batch=args.batch,
+        # plan against the config actually served: a smoke engine must not
+        # run a prefetch depth chosen for the full-size model
+        scfg = elk_serve_config(cfg, batch=args.batch,
                                 cache_capacity=args.cache,
                                 kv_dtype=args.kv_dtype)
-        print(f"ELK scheduler: prefetch_depth={scfg.prefetch_depth}")
+        print(f"ELK scheduler: prefetch_depth={scfg.prefetch_depth} "
+              f"prefill_chunk={scfg.prefill_chunk}")
     else:
         scfg = ServeConfig(
             batch=args.batch, cache_capacity=args.cache, mode=args.mode,
@@ -53,6 +104,15 @@ def main() -> None:
 
     params = tfm.init_params(jax.random.PRNGKey(0), cfg)
     eng = ServeEngine(cfg, mesh, params, scfg)
+
+    if args.trace > 0:
+        stats = _run_trace(eng, args, cfg.vocab_size)
+        if args.json_out:
+            with open(args.json_out, "w") as f:
+                json.dump(stats, f, indent=1)
+            print(f"wrote {args.json_out}")
+        return
+
     prompts = jax.random.randint(
         jax.random.PRNGKey(1), (args.batch, args.prompt_len), 0,
         cfg.vocab_size)

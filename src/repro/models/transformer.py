@@ -196,12 +196,17 @@ class CacheSpec:
     capacity: int                  # KV slots per layer (ring buffer)
     batch: int
     kv_dtype: Any = jnp.bfloat16   # bf16 | int8 (quantized serving cache)
+    per_slot: bool = False         # independent per-request slots
+                                   # (pos: (B,), slot_pos: (B, C))
 
 
 def init_cache(cfg: ModelConfig, spec: CacheSpec) -> dict:
     L, B, C = cfg.num_layers, spec.batch, spec.capacity
     hd, nkv = cfg.resolved_head_dim, cfg.num_kv_heads
-    cache: dict = {"pos": jnp.zeros((), jnp.int32)}
+    if spec.per_slot and cfg.encoder_layers:
+        raise ValueError("per-slot caches do not support enc-dec models")
+    cache: dict = {"pos": (jnp.zeros((B,), jnp.int32) if spec.per_slot
+                           else jnp.zeros((), jnp.int32))}
     if not cfg.rwkv:
         kv_shape = (L, B, nkv, C, hd)
         cache["k"] = jnp.zeros(kv_shape, spec.kv_dtype)
@@ -209,7 +214,8 @@ def init_cache(cfg: ModelConfig, spec: CacheSpec) -> dict:
         if spec.kv_dtype == jnp.int8:
             cache["k_scale"] = jnp.zeros((L, B, nkv, C, 1), jnp.bfloat16)
             cache["v_scale"] = jnp.zeros((L, B, nkv, C, 1), jnp.bfloat16)
-        cache["slot_pos"] = jnp.full((C,), _POS_SENTINEL, jnp.int32)
+        cache["slot_pos"] = jnp.full((B, C) if spec.per_slot else (C,),
+                                     _POS_SENTINEL, jnp.int32)
     if cfg.rwkv:
         h = cfg.num_heads
         cache["rwkv_state"] = jnp.zeros((L, B, h, cfg.d_model // h,
@@ -331,6 +337,58 @@ def _self_attention_decode(x, p, cfg: ModelConfig, spec: AttnSpec,
     return linear(out, p["w_o"]), k_cache, v_cache, new_scales
 
 
+def _self_attention_slots(x, p, cfg: ModelConfig, spec: AttnSpec,
+                          k_cache, v_cache, kq_scales, slot_pos, positions):
+    """Per-slot cached attention: every batch row sits at its own absolute
+    position.  x: (B,T,d), positions: (B,T) per-row token positions,
+    slot_pos: (B,C) per-row ring tags (already updated for this step's
+    writes), caches (B,Hkv,C,hd).  Serves both the continuous-batching
+    decode step (T=1, B=slots) and chunked prefill (B=1, T=chunk)."""
+    b, t, d = x.shape
+    c = k_cache.shape[2]
+    q, k_new, v_new = _project_qkv(x, p, cfg)          # (B,H,T,hd)
+    sin, cos = rope_tables(positions, spec.head_dim, cfg.rope_theta)
+    q = apply_rope(q, sin, cos)
+    k_new = apply_rope(k_new, sin, cos)
+
+    # scatter the T new K/V rows into each row's ring slots: touches only
+    # the T written slots (T <= C keeps them distinct), so with donated
+    # buffers the per-token write is O(T), not O(C)
+    rows = jnp.arange(b)[:, None]                      # (B,1)
+    slots = positions % c                              # (B,T)
+
+    def scatter(buf, val):                             # val: (B,H,T,*)
+        return buf.at[rows, :, slots, :].set(
+            val.astype(buf.dtype).transpose(0, 2, 1, 3),
+            unique_indices=True)
+
+    if kq_scales is not None:
+        kq, ks = _quantize_kv(k_new)
+        vq, vs = _quantize_kv(v_new)
+        k_cache = scatter(k_cache, kq)
+        v_cache = scatter(v_cache, vq)
+        k_sc = scatter(kq_scales[0], ks)
+        v_sc = scatter(kq_scales[1], vs)
+        k = _dequantize_kv(k_cache, k_sc)
+        v = _dequantize_kv(v_cache, v_sc)
+        new_scales = (k_sc, v_sc)
+    else:
+        k_cache = scatter(k_cache, k_new)
+        v_cache = scatter(v_cache, v_new)
+        k, v = k_cache, v_cache
+        new_scales = None
+
+    # per-row additive mask from the ring tags (sentinel slots mask out)
+    ok = slot_pos[:, None, :] <= positions[:, :, None]
+    if spec.sliding_window:
+        ok &= slot_pos[:, None, :] > positions[:, :, None] - spec.sliding_window
+    bias = jnp.where(ok, 0.0, -jnp.inf).astype(jnp.float32)
+    bias = bias[:, None, None, :, :]                   # (B,1,1,T,C)
+    out = gqa_attention(q, k.astype(q.dtype), v.astype(q.dtype), bias, spec)
+    out = out.transpose(0, 2, 1, 3).reshape(b, t, -1)
+    return linear(out, p["w_o"]), k_cache, v_cache, new_scales
+
+
 def _cross_attention(x, p, cfg: ModelConfig, ck, cv, mesh=None):
     """Cross-attention, q-chunked like self-attention: the unchunked
     (B,H,Sq,Senc) fp32 score tensor dominated whisper training memory
@@ -354,7 +412,8 @@ def _ffn(x, p, cfg: ModelConfig, kind: str, mode: str = "train",
     if kind == "moe":
         b, s, d = x.shape
         out = moe_mod.moe_ffn(x.reshape(b * s, d), p["moe"], cfg,
-                              dropless=(mode == "decode"), mesh=mesh)
+                              dropless=(mode in ("decode", "slots")),
+                              mesh=mesh)
         out = out.reshape(b, s, d)
         if cfg.moe_shared_d_ff:
             out = out + mlp(x, p["shared_mlp"], cfg)
@@ -378,6 +437,13 @@ def _decoder_layer(x, p, cfg: ModelConfig, kind: str, spec: AttnSpec,
         attn_out, k_c, v_c, scales = _self_attention_decode(
             h, p["attn"], cfg, spec, layer_cache["k"], layer_cache["v"],
             layer_cache.get("scales"), ctx["slot_pos"], ctx["pos"])
+        new_cache.update(k=k_c, v=v_c)
+        if scales is not None:
+            new_cache["scales"] = scales
+    elif ctx["mode"] == "slots":
+        attn_out, k_c, v_c, scales = _self_attention_slots(
+            h, p["attn"], cfg, spec, layer_cache["k"], layer_cache["v"],
+            layer_cache.get("scales"), ctx["slot_pos"], ctx["positions"])
         new_cache.update(k=k_c, v=v_c)
         if scales is not None:
             new_cache["scales"] = scales
@@ -748,6 +814,108 @@ def decode_step(params, cfg: ModelConfig, token: jax.Array, cache: dict,
     x, new_layers = _run_decoder_with_cross(params, cfg, x, ctx, cache)
     new_cache = _merge_cache(cfg, cache, new_layers, pos + 1, slot_pos)
     return _logits(params, cfg, x), new_cache
+
+
+# ---------------------------------------------------------------------------
+# slot-addressable serving (continuous batching)
+# ---------------------------------------------------------------------------
+
+def _tag_slots(slot_pos: jax.Array, positions: jax.Array) -> jax.Array:
+    """Tag each row's ring slots with this step's absolute positions.
+    slot_pos: (B,C), positions: (B,T) -> updated (B,C).  One batched
+    scatter (T <= C keeps the slots distinct, like the K/V scatter)."""
+    b, t = positions.shape
+    c = slot_pos.shape[1]
+    rows = jnp.arange(b)[:, None]
+    return slot_pos.at[rows, positions % c].set(positions,
+                                                unique_indices=True)
+
+
+def _slots_ctx(cache: dict, positions: jax.Array, mesh) -> tuple[dict, Any]:
+    slot_pos = None
+    if "slot_pos" in cache:
+        slot_pos = _tag_slots(cache["slot_pos"], positions)
+    ctx = {"mode": "slots", "pos": cache["pos"], "positions": positions,
+           "slot_pos": slot_pos, "enc_out": None, "mesh": mesh}
+    return ctx, slot_pos
+
+
+def decode_slots(params, cfg: ModelConfig, token: jax.Array, cache: dict,
+                 mesh=None) -> tuple[jax.Array, dict]:
+    """One continuous-batching step: token (B,) against a per-slot cache
+    (``CacheSpec(per_slot=True)``: pos (B,), slot_pos (B,C)).  Every slot
+    advances by one token at its *own* position -> (logits (B,1,V), cache).
+    """
+    if cfg.encoder_layers:
+        raise ValueError("decode_slots does not support enc-dec models")
+    x = jnp.take(params["embed"], token[:, None], axis=0)
+    if cfg.scale_embed:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    pos = cache["pos"]                                  # (B,)
+    positions = pos[:, None]                            # (B,1)
+    ctx, slot_pos = _slots_ctx(cache, positions, mesh)
+    x, new_layers = _run_decoder(params, cfg, x, ctx, cache)
+    new_cache = _merge_cache(cfg, cache, new_layers, pos + 1, slot_pos)
+    return _logits(params, cfg, x), new_cache
+
+
+def chunk_prefill(params, cfg: ModelConfig, tokens: jax.Array, cache: dict,
+                  mesh=None) -> tuple[jax.Array, dict]:
+    """Advance a per-slot cache by a chunk of T prompt tokens.
+
+    tokens: (B,T) starting at each row's ``cache["pos"]``.  Attention runs
+    against the ring cache (earlier chunks' K/V plus this chunk's, tagged
+    by absolute position), so while the prompt fits the ring (total length
+    <= C) any chunking — interleaved with other requests' decode steps —
+    is bit-identical to a single pass.  Beyond capacity the ring is
+    already a sliding-window approximation and a chunk's writes land
+    before its tokens attend, so chunk boundaries decide which of the
+    oldest in-window keys survive — the same class of approximation as
+    lock-step ``prefill`` keeping the last C rows of full attention.
+    Returns (last-token logits (B,1,V), cache)."""
+    if cfg.encoder_layers:
+        raise ValueError("chunk_prefill does not support enc-dec models")
+    b, t = tokens.shape
+    x = _embed(params, cfg, tokens, None)
+    pos = cache["pos"]                                  # (B,)
+    positions = pos[:, None] + jnp.arange(t, dtype=jnp.int32)[None, :]
+    if "slot_pos" in cache and t > cache["slot_pos"].shape[1]:
+        raise ValueError(f"chunk of {t} tokens exceeds cache capacity "
+                         f"{cache['slot_pos'].shape[1]}")
+    ctx, slot_pos = _slots_ctx(cache, positions, mesh)
+    x, new_layers = _run_decoder(params, cfg, x, ctx, cache)
+    new_cache = _merge_cache(cfg, cache, new_layers, pos + t, slot_pos)
+    return _logits(params, cfg, x[:, -1:, :]), new_cache
+
+
+def _slot_batch_axis(key: str) -> int:
+    """Axis of the request/slot dim in a cache leaf."""
+    return 0 if key in ("pos", "slot_pos") else 1
+
+
+def cache_insert_slot(cache: dict, slot: jax.Array, req_cache: dict) -> dict:
+    """Insert a prefilled single-request cache (batch 1) into ``slot`` of a
+    per-slot batch cache.  Shapes must agree except the slot/batch dim."""
+    out = {}
+    for key, buf in cache.items():
+        out[key] = lax.dynamic_update_slice_in_dim(
+            buf, req_cache[key].astype(buf.dtype), slot,
+            axis=_slot_batch_axis(key))
+    return out
+
+
+def cache_evict_slot(cache: dict, slot: jax.Array) -> dict:
+    """Free a slot: reset its position and mask every ring tag so the stale
+    K/V is unreachable.  The buffers themselves are left in place."""
+    out = dict(cache)
+    out["pos"] = lax.dynamic_update_slice_in_dim(
+        cache["pos"], jnp.zeros((1,), jnp.int32), slot, axis=0)
+    if "slot_pos" in cache:
+        c = cache["slot_pos"].shape[1]
+        out["slot_pos"] = lax.dynamic_update_slice_in_dim(
+            cache["slot_pos"], jnp.full((1, c), _POS_SENTINEL, jnp.int32),
+            slot, axis=0)
+    return out
 
 
 def loss_fn(params, cfg: ModelConfig, batch: dict,

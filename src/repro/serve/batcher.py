@@ -1,0 +1,263 @@
+"""Continuous-batching request scheduler over the slot-batched engine.
+
+The lock-step ``ServeEngine.generate`` path serves one static batch: every
+request waits for batch formation, prefills together, and decodes until the
+*slowest* request finishes.  This module schedules at request granularity
+instead (DESIGN.md §6):
+
+* a request **queue** admits work as it arrives;
+* requests **prefill in chunks** (``ServeConfig.prefill_chunk`` tokens per
+  scheduler tick, the admission budget the ELK plan sizes to the gather-
+  ahead window), interleaved with decode steps of the running batch;
+* a prefilled request is **spliced into a free slot** of the engine's
+  per-slot cache and decodes alongside whatever else is running;
+* a finished request **leaves its slot immediately** — the next queued
+  request takes it over while the others keep decoding.
+
+The decode hot loop is one donated ``engine.step`` per tick regardless of
+how requests come and go, so throughput tracks slot occupancy instead of
+the lock-step batch's worst case.  Greedy outputs are bit-identical to
+running each request alone (`tests/test_serve_batcher.py`).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Callable, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serve.engine import ServeEngine
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # (S0,) int32 token ids
+    max_new_tokens: int
+    arrival_s: float = 0.0        # offset from trace start
+
+
+@dataclasses.dataclass
+class Completion:
+    rid: int
+    tokens: np.ndarray            # (S0 + max_new_tokens,)
+    prompt_len: int
+    arrival_s: float
+    finish_s: float
+    finish_order: int
+
+    @property
+    def latency_s(self) -> float:
+        return self.finish_s - self.arrival_s
+
+
+@dataclasses.dataclass
+class _Prefill:
+    req: Request
+    cache: dict
+    off: int                      # prompt tokens already processed
+    slot: int                     # reserved destination slot
+
+
+@dataclasses.dataclass
+class _Active:
+    req: Request
+    generated: list
+
+
+def _chunk_len(remaining: int, budget: int) -> int:
+    """Largest power of two <= min(remaining, budget): bounds the set of
+    compiled chunk shapes to O(log budget) for arbitrary prompt lengths."""
+    t = 1
+    while t * 2 <= min(remaining, budget):
+        t *= 2
+    return t
+
+
+class ContinuousBatcher:
+    """Drives a ``ServeEngine`` in slot-batched mode.
+
+    ``submit`` enqueues requests; each ``tick`` performs (at most) one
+    admission, one prefill chunk, and one decode step over the running
+    slots.  ``run`` replays a whole arrival trace to completion.
+    """
+
+    def __init__(self, engine: ServeEngine,
+                 clock: Callable[[], float] = time.perf_counter):
+        self.engine = engine
+        self.slots = engine.scfg.slots
+        # a chunk larger than the cache capacity would wrap a request's
+        # own ring mid-chunk; clamp whatever the config asked for
+        self.chunk_budget = max(1, min(engine.scfg.prefill_chunk,
+                                       engine.scfg.cache_capacity))
+        self.clock = clock
+        self.queue: deque[Request] = deque()
+        self.prefilling: Optional[_Prefill] = None
+        self.active: dict[int, _Active] = {}
+        self.free = list(range(self.slots))[::-1]   # pop() -> lowest slot
+        self.tokens = np.zeros((self.slots,), np.int32)
+        self.completed: list[Completion] = []
+        self.t0 = self.clock()
+
+    # -- scheduling --------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        if len(req.prompt) == 0:
+            raise ValueError(f"request {req.rid}: empty prompt (the first "
+                             "generated token is seeded by prefill)")
+        self.queue.append(req)
+
+    @property
+    def busy(self) -> bool:
+        return bool(self.queue or self.prefilling or self.active)
+
+    def _finish(self, req: Request, new_tokens: list) -> None:
+        toks = np.concatenate([np.asarray(req.prompt, np.int32),
+                               np.asarray(new_tokens, np.int32)])
+        self.completed.append(Completion(
+            rid=req.rid, tokens=toks, prompt_len=len(req.prompt),
+            arrival_s=req.arrival_s, finish_s=self.clock() - self.t0,
+            finish_order=len(self.completed)))
+
+    def _admit(self) -> None:
+        while self.queue and self.queue[0].max_new_tokens <= 0:
+            self._finish(self.queue.popleft(), [])
+        if self.prefilling is None and self.queue and self.free:
+            req = self.queue.popleft()
+            self.prefilling = _Prefill(
+                req=req, cache=self.engine.new_request_cache(), off=0,
+                slot=self.free.pop())
+
+    def _prefill_tick(self) -> None:
+        ps = self.prefilling
+        if ps is None:
+            return
+        t = _chunk_len(len(ps.req.prompt) - ps.off, self.chunk_budget)
+        chunk = jnp.asarray(
+            ps.req.prompt[None, ps.off:ps.off + t], jnp.int32)
+        tok, ps.cache = self.engine.prefill_chunk(ps.cache, chunk)
+        ps.off += t
+        if ps.off < len(ps.req.prompt):
+            return
+        first = int(tok[0])
+        if ps.req.max_new_tokens == 1:      # no decode needed
+            self._finish(ps.req, [first])
+            self.free.append(ps.slot)
+        else:
+            self.engine.insert_slot(ps.slot, ps.cache)
+            self.active[ps.slot] = _Active(req=ps.req, generated=[first])
+            self.tokens[ps.slot] = first
+        self.prefilling = None
+
+    def _decode_tick(self) -> None:
+        if not self.active:
+            return
+        nxt = np.asarray(self.engine.step(jnp.asarray(self.tokens)))
+        self.tokens = nxt.copy()
+        for slot in sorted(self.active):
+            st = self.active[slot]
+            st.generated.append(int(nxt[slot]))
+            if len(st.generated) >= st.req.max_new_tokens:
+                self._finish(st.req, st.generated)
+                self.engine.evict_slot(slot)
+                del self.active[slot]
+                self.free.append(slot)
+
+    def tick(self) -> None:
+        """One scheduler step: admit, advance one prefill chunk, decode."""
+        self._admit()
+        self._prefill_tick()
+        self._decode_tick()
+
+    # -- trace replay ------------------------------------------------------
+    def run(self, requests: list[Request]) -> list[Completion]:
+        """Replay an arrival trace to completion; returns completions in
+        finish order (not arrival order)."""
+        pending = sorted(requests, key=lambda r: (r.arrival_s, r.rid))
+        self.t0 = self.clock()
+        while pending or self.busy:
+            now = self.clock() - self.t0
+            while pending and pending[0].arrival_s <= now:
+                self.submit(pending.pop(0))
+            if not self.busy:
+                time.sleep(min(pending[0].arrival_s - now, 0.01))
+                continue
+            self.tick()
+        return self.completed
+
+
+# ---------------------------------------------------------------------------
+# static-batching baseline + trace tooling (shared by bench and launcher)
+# ---------------------------------------------------------------------------
+
+def run_static_trace(engine: ServeEngine, requests: list[Request],
+                     clock: Callable[[], float] = time.perf_counter
+                     ) -> list[Completion]:
+    """Lock-step baseline: requests batch up in arrival order; each batch
+    left-pads prompts to its longest and decodes until its slowest request
+    is done (``generate`` with the batch-max step count).
+
+    This is a *cost* baseline (what a static server pays in padded prefill
+    and batch-max decode steps), not a parity path: ``generate`` has no
+    padding mask, so in a mixed-length batch the pad tokens leak into a
+    request's context and its tokens can differ from serving it alone.
+    Bit-identical greedy parity is asserted between the continuous path
+    and unpadded lock-step ``generate`` (tests/test_serve_batcher.py)."""
+    bsz = engine.scfg.batch
+    order = sorted(requests, key=lambda r: (r.arrival_s, r.rid))
+    out: list[Completion] = []
+    t0 = clock()
+    for i in range(0, len(order), bsz):
+        batch = order[i:i + bsz]
+        while clock() - t0 < max(r.arrival_s for r in batch):
+            time.sleep(0.001)
+        smax = max(len(r.prompt) for r in batch)
+        steps = max(r.max_new_tokens for r in batch)
+        prompts = np.zeros((bsz, smax), np.int32)
+        for j, r in enumerate(batch):
+            prompts[j, smax - len(r.prompt):] = r.prompt
+        toks = np.asarray(engine.generate(jnp.asarray(prompts), steps=steps))
+        finish = clock() - t0
+        for j, r in enumerate(batch):
+            out.append(Completion(
+                rid=r.rid,
+                tokens=np.concatenate([
+                    np.asarray(r.prompt, np.int32),
+                    toks[j, smax:smax + r.max_new_tokens].astype(np.int32)]),
+                prompt_len=len(r.prompt),
+                arrival_s=r.arrival_s, finish_s=finish,
+                finish_order=len(out)))
+    return out
+
+
+def make_trace(n: int, *, vocab_size: int, prompt_lens=(8, 12, 20, 32),
+               max_new=(4, 8, 16, 24), arrival_spacing_s: float = 0.0,
+               seed: int = 0) -> list[Request]:
+    """Mixed-length request trace: prompts/output budgets cycle through the
+    given grids out of phase, arrivals optionally staggered."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n):
+        s0 = prompt_lens[i % len(prompt_lens)]
+        reqs.append(Request(
+            rid=i,
+            prompt=rng.integers(0, vocab_size, size=(s0,), dtype=np.int32),
+            max_new_tokens=max_new[(i * 3 + 1) % len(max_new)],
+            arrival_s=i * arrival_spacing_s))
+    return reqs
+
+
+def summarize(completions: list[Completion], wall_s: float) -> dict:
+    """Throughput (generated tokens only) + latency percentiles."""
+    lats = np.asarray([c.latency_s for c in completions])
+    gen = sum(len(c.tokens) - c.prompt_len for c in completions)
+    return {
+        "requests": len(completions),
+        "wall_s": round(wall_s, 4),
+        "gen_tok_s": 0.0 if wall_s <= 0 else round(gen / wall_s, 2),
+        "p50_latency_s": round(float(np.percentile(lats, 50)), 4),
+        "p99_latency_s": round(float(np.percentile(lats, 99)), 4),
+    }

@@ -10,21 +10,34 @@ Two execution modes:
   ``core/integration.pod_plan``.  This is what lets a model k-times larger
   than one replica's HBM serve from the pod, at the cost of ICI traffic —
   the paper's capacity/IO/communication trade, live.
+
+Two batching disciplines (DESIGN.md §6):
+
+* lock-step      — ``generate``: one static batch, every request advances
+  together.
+* slot-batched   — ``step``/``prefill_chunk``/``insert_slot``/
+  ``evict_slot``: a per-slot cache where every row sits at its own
+  position; requests join/leave the running batch at slot granularity.
+  ``serve/batcher.py`` drives this as a continuous-batching scheduler.
+
+Every jitted step that threads a cache **donates** it: the compiled step
+aliases the cache input to the cache output (no per-token copy, no double
+HBM footprint), exactly as ``train/step.py`` donates params/opt state.
+Callers must treat a cache passed to the engine as consumed and use the
+returned one.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.distributed.sharding import (batch_axes, batch_shardings,
-                                        cache_shardings, param_shardings,
-                                        replicated)
+from repro.distributed.sharding import (batch_axes, cache_shardings,
+                                        param_shardings)
 from repro.models import transformer as tfm
 from repro.models.config import ModelConfig
 from repro.models.frontends import frontend_embeddings
@@ -39,25 +52,39 @@ class ServeConfig:
     mode: str = "gspmd"               # gspmd | elk_stream
     prefetch_depth: int = 2           # ELK preload number (elk_stream)
     kv_dtype: str = "bfloat16"        # bfloat16 | int8
+    max_slots: int = 0                # continuous batching slots (0 = batch)
+    prefill_chunk: int = 32           # max prompt tokens per scheduler tick
+
+    @property
+    def slots(self) -> int:
+        return self.max_slots or self.batch
 
 
 def elk_serve_config(cfg: ModelConfig, *, batch: int, cache_capacity: int,
                      kv_dtype: str = "bfloat16", num_chips: int = 256,
                      design: str = "ELK-Full") -> ServeConfig:
-    """ServeConfig with the prefetch depth chosen by the ELK scheduler.
+    """ServeConfig with the serving knobs chosen by the ELK scheduler.
 
     ``pod_plan`` reads the process-level plan cache (DESIGN.md §2), so this
     is cheap to call per engine/request once any compile for the same
     (model, shape, design) has happened in this process.
+
+    * ``prefetch_depth`` — the paper's preload number p, per layer-block.
+    * ``prefill_chunk``  — admission budget for chunked prefill: how many
+      prompt tokens one scheduler tick may process.  Sized to the gather-
+      ahead window (16 tokens of chunk compute per preloaded block keeps
+      the chunk hidden behind the window's ICI traffic), clamped to the
+      cache capacity so one chunk never wraps a request's own ring.
     """
     from repro.core.integration import pod_plan
 
     knobs = pod_plan(cfg, batch=batch, seq=cache_capacity, phase="decode",
                      num_chips=num_chips, design=design)
+    depth = max(knobs.prefetch_depth, 1)
+    chunk = min(max(16, min(16 * depth, 128)), cache_capacity)
     return ServeConfig(batch=batch, cache_capacity=cache_capacity,
-                       mode="elk_stream",
-                       prefetch_depth=max(knobs.prefetch_depth, 1),
-                       kv_dtype=kv_dtype)
+                       mode="elk_stream", prefetch_depth=depth,
+                       kv_dtype=kv_dtype, prefill_chunk=chunk)
 
 
 class ServeEngine:
@@ -70,15 +97,15 @@ class ServeEngine:
         self.p_sh = param_shardings(params, mesh, fsdp=fsdp)
         self.params = jax.device_put(params, self.p_sh)
 
-        cache = tfm.init_cache(cfg, tfm.CacheSpec(
+        self._spec = tfm.CacheSpec(
             capacity=scfg.cache_capacity, batch=scfg.batch,
-            kv_dtype=jnp.dtype(scfg.kv_dtype)))
-        self.c_sh = cache_shardings(cache, mesh)
-        self.cache0 = jax.device_put(cache, self.c_sh)
+            kv_dtype=jnp.dtype(scfg.kv_dtype))
+        cache_shape = jax.eval_shape(lambda: tfm.init_cache(cfg, self._spec))
+        self.c_sh = cache_shardings(cache_shape, mesh)
 
         bp = batch_axes(mesh)
-        tok_sh = NamedSharding(mesh, P(bp))
-        logit_sh = NamedSharding(mesh, P(bp, None, "model"))
+        self._tok_sh = tok_sh = NamedSharding(mesh, P(bp))
+        self._logit_sh = logit_sh = NamedSharding(mesh, P(bp, None, "model"))
 
         if scfg.mode == "elk_stream":
             from repro.serve.stream import streaming_decode_step
@@ -91,10 +118,13 @@ class ServeEngine:
             def decode(params, token, cache):
                 return tfm.decode_step(params, cfg, token, cache)
 
+        # the decode hot loop donates the cache: the compiled step aliases
+        # it in-place instead of copying (L,B,Hkv,C,hd) every token
         self._decode = jax.jit(
             decode,
             in_shardings=(self.p_sh, tok_sh, self.c_sh),
             out_shardings=(logit_sh, self.c_sh),
+            donate_argnums=(2,),
         )
 
         def prefill(params, tokens, cache, embeds=None, enc_embeds=None):
@@ -105,23 +135,43 @@ class ServeEngine:
                 kw["enc_embeds"] = enc_embeds
             return tfm.prefill(params, cfg, tokens, cache, **kw)
 
-        self._prefill = jax.jit(prefill)
+        self._prefill = jax.jit(prefill, donate_argnums=(2,))
+
+        def prefill_fresh(params, tokens, embeds=None, enc_embeds=None):
+            cache = tfm.init_cache(cfg, self._spec)
+            return prefill(params, tokens, cache, embeds, enc_embeds)
+
+        self._prefill_fresh = jax.jit(
+            prefill_fresh, out_shardings=(logit_sh, self.c_sh))
+
+        # -- continuous-batching state (built lazily by _ensure_slots) ----
+        self.slot_cache: Optional[dict] = None
+        self._chunk_jits: dict[int, Any] = {}
 
     # -- public API --------------------------------------------------------
     def prefill(self, tokens: jax.Array, cache: Optional[dict] = None,
                 **frontends) -> tuple[jax.Array, dict]:
-        cache = cache if cache is not None else self.cache0
+        """Prefill the prompt.  With ``cache=None`` the initial cache is
+        materialized inside the compiled step (nothing to copy); a cache
+        passed explicitly is donated — use the returned one."""
+        if cache is None:
+            return self._prefill_fresh(self.params, tokens,
+                                       frontends.get("embeds"),
+                                       frontends.get("enc_embeds"))
         return self._prefill(self.params, tokens, cache,
                              frontends.get("embeds"),
                              frontends.get("enc_embeds"))
 
     def decode(self, token: jax.Array, cache: dict
                ) -> tuple[jax.Array, dict]:
+        """One lock-step decode step.  ``cache`` is donated."""
         return self._decode(self.params, token, cache)
 
     def generate(self, prompts: jax.Array, steps: int,
                  greedy: bool = True) -> jax.Array:
         """prompts: (B, S0) -> (B, S0 + steps) greedy continuation."""
+        if steps <= 0:
+            return prompts
         fe = frontend_embeddings(self.cfg, prompts.shape[0])
         logits, cache = self.prefill(prompts, **fe)
         tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
@@ -131,3 +181,93 @@ class ServeEngine:
             tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
             out.append(tok[:, None])
         return jnp.concatenate(out, axis=1)
+
+    # -- slot-batched serving (continuous batching) ------------------------
+    def _ensure_slots(self) -> None:
+        if self.slot_cache is not None:
+            return
+        cfg, scfg, mesh = self.cfg, self.scfg, self.mesh
+        self._slot_spec = dataclasses.replace(
+            self._spec, batch=scfg.slots, per_slot=True)
+        self._req_spec = dataclasses.replace(
+            self._spec, batch=1, per_slot=True)
+        slot_shape = jax.eval_shape(
+            lambda: tfm.init_cache(cfg, self._slot_spec))
+        self._slot_sh = cache_shardings(slot_shape, mesh)
+
+        if scfg.mode == "elk_stream":
+            from repro.serve.stream import streaming_decode_slots
+
+            def decode_slots(params, token, cache):
+                return streaming_decode_slots(params, cfg, token, cache,
+                                              mesh=mesh,
+                                              prefetch=scfg.prefetch_depth)
+        else:
+            def decode_slots(params, token, cache):
+                return tfm.decode_slots(params, cfg, token, cache)
+
+        def step(params, token, cache):
+            logits, cache = decode_slots(params, token, cache)
+            return jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32), \
+                cache
+
+        self._step_slots = jax.jit(
+            step,
+            in_shardings=(self.p_sh, self._tok_sh, self._slot_sh),
+            out_shardings=(self._tok_sh, self._slot_sh),
+            donate_argnums=(2,),
+        )
+        self._insert = jax.jit(tfm.cache_insert_slot, donate_argnums=(0,))
+        self._evict = jax.jit(tfm.cache_evict_slot, donate_argnums=(0,))
+        self._req_cache0 = jax.jit(
+            lambda: tfm.init_cache(cfg, self._req_spec))
+        self.slot_cache = jax.jit(
+            lambda: tfm.init_cache(cfg, self._slot_spec),
+            out_shardings=self._slot_sh)()
+
+    def new_request_cache(self) -> dict:
+        """Fresh single-request per-slot cache for chunked prefill."""
+        self._ensure_slots()
+        return self._req_cache0()
+
+    def prefill_chunk(self, req_cache: dict, tokens: jax.Array
+                      ) -> tuple[jax.Array, dict]:
+        """Advance one request's prefill by a chunk of (1, T) tokens.
+        Returns (greedy next token (1,), cache).  ``req_cache`` is donated;
+        one jit per distinct T (the batcher quantizes chunk lengths to
+        powers of two, so the set stays O(log prefill_chunk))."""
+        self._ensure_slots()
+        t = tokens.shape[1]
+        if t not in self._chunk_jits:
+            cfg, mesh = self.cfg, self.mesh
+
+            def chunk(params, toks, cache):
+                logits, cache = tfm.chunk_prefill(params, cfg, toks, cache,
+                                                  mesh=mesh)
+                return (jnp.argmax(logits[:, -1, :], axis=-1)
+                        .astype(jnp.int32), cache)
+
+            self._chunk_jits[t] = jax.jit(chunk, donate_argnums=(2,))
+        return self._chunk_jits[t](self.params, tokens, req_cache)
+
+    def insert_slot(self, slot: int, req_cache: dict) -> None:
+        """Splice a prefilled request into ``slot`` of the running batch
+        (in place: the slot cache is donated through the insert)."""
+        self._ensure_slots()
+        self.slot_cache = self._insert(self.slot_cache,
+                                       jnp.int32(slot), req_cache)
+
+    def evict_slot(self, slot: int) -> None:
+        """Remove a finished request: reset the slot's position and mask
+        its ring tags so the stale K/V is unreachable."""
+        self._ensure_slots()
+        self.slot_cache = self._evict(self.slot_cache, jnp.int32(slot))
+
+    def step(self, tokens: jax.Array) -> jax.Array:
+        """One continuous-batching decode step over the mutable slot batch:
+        tokens (slots,) int32 -> greedy next token per slot (slots,).  The
+        slot cache advances in place (donated buffers, no copy)."""
+        self._ensure_slots()
+        tok, self.slot_cache = self._step_slots(self.params, tokens,
+                                                self.slot_cache)
+        return tok

@@ -149,6 +149,25 @@ def _stack_cache(cache, cfg: ModelConfig):
     return out
 
 
+def streaming_decode_slots(params, cfg: ModelConfig, token, cache,
+                           mesh: Mesh, prefetch: int = 2):
+    """ELK-streaming version of ``transformer.decode_slots``: one
+    continuous-batching step over a per-slot cache, with block weights
+    gathered ahead through the same preload window as the lock-step path.
+    """
+    if cfg.encoder_layers:
+        raise ValueError("decode_slots does not support enc-dec models")
+    x = jnp.take(params["embed"], token[:, None], axis=0)
+    if cfg.scale_embed:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    pos = cache["pos"]                                  # (B,)
+    ctx, slot_pos = tfm._slots_ctx(cache, pos[:, None], mesh)
+    x, new_layers = streaming_decoder(params, cfg, x, ctx, cache, mesh,
+                                      prefetch)
+    new_cache = tfm._merge_cache(cfg, cache, new_layers, pos + 1, slot_pos)
+    return tfm._logits(params, cfg, x), new_cache
+
+
 def streaming_decode_step(params, cfg: ModelConfig, token, cache,
                           mesh: Mesh, prefetch: int = 2):
     """ELK-streaming version of ``transformer.decode_step``.

@@ -145,7 +145,8 @@ class TestCheckpoint:
 
 
 class TestServe:
-    @pytest.mark.parametrize("arch", ["qwen3_14b", "rwkv6_7b",
+    # one arch per cache family: dense GQA, RWKV state, hybrid-SSM, MoE
+    @pytest.mark.parametrize("arch", ["qwen3_14b", "rwkv6_7b", "hymba_1_5b",
                                       "llama4_maverick_400b_a17b"])
     def test_stream_equals_gspmd(self, arch, mesh11, rng):
         cfg = get_smoke_config(arch)
@@ -157,6 +158,19 @@ class TestServe:
                 batch=2, cache_capacity=32, mode=mode, prefetch_depth=2))
             outs[mode] = np.asarray(eng.generate(prompts, steps=5))
         np.testing.assert_array_equal(outs["gspmd"], outs["elk_stream"])
+
+    def test_generate_token_count_edge_steps(self, mesh11, rng):
+        """generate must return exactly S0 + steps tokens, including the
+        steps=0 (no continuation) and steps=1 (prefill token only) edges."""
+        cfg = get_smoke_config("qwen3_14b")
+        params = T.init_params(rng, cfg)
+        eng = ServeEngine(cfg, mesh11, params, ServeConfig(
+            batch=2, cache_capacity=32))
+        prompts = jax.random.randint(rng, (2, 7), 0, cfg.vocab_size)
+        for steps in (0, 1, 3):
+            out = np.asarray(eng.generate(prompts, steps=steps))
+            assert out.shape == (2, 7 + steps)
+            np.testing.assert_array_equal(out[:, :7], np.asarray(prompts))
 
     def test_prefetch_depth_invariance(self, mesh11, rng):
         """The ELK preload number changes scheduling, never results."""
