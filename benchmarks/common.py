@@ -14,10 +14,24 @@ OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
 DESIGNS = ("Basic", "Static", "ELK-Dyn", "ELK-Full", "Ideal")
 PAPER_MODELS = ("llama2_13b", "gemma2_27b", "opt_30b", "llama2_70b")
 
+_out_dir = OUT_DIR
+
+
+def out_dir() -> str:
+    """Directory every benchmark section writes its JSON/CSV under
+    (``benchmarks.run --out-dir`` overrides the default)."""
+    return _out_dir
+
+
+def set_out_dir(path: str) -> None:
+    global _out_dir
+    _out_dir = path
+    os.makedirs(path, exist_ok=True)
+
 
 def emit(name: str, rows: list[dict]) -> str:
-    os.makedirs(OUT_DIR, exist_ok=True)
-    path = os.path.join(OUT_DIR, f"{name}.csv")
+    os.makedirs(_out_dir, exist_ok=True)
+    path = os.path.join(_out_dir, f"{name}.csv")
     if rows:
         fields: list[str] = []
         for r in rows:
@@ -30,6 +44,7 @@ def emit(name: str, rows: list[dict]) -> str:
             w.writerows(rows)
     for r in rows:
         print(",".join(f"{k}={v}" for k, v in r.items()))
+    print(f"wrote {os.path.normpath(path)}")
     return path
 
 

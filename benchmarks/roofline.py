@@ -13,7 +13,7 @@ import glob
 import json
 import os
 
-from benchmarks.common import OUT_DIR, emit
+from benchmarks.common import emit
 
 DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
                           "dryrun")

@@ -1,11 +1,35 @@
 """Benchmark driver: one section per paper table/figure + the roofline
-report.  ``python -m benchmarks.run [--quick] [--section NAME ...]``."""
+report.  ``python -m benchmarks.run [--quick] [--section NAME ...]
+[--out-dir DIR]``.
+
+Every section writes its JSON/CSV under one output directory
+(``experiments/bench/`` by default); the ``BENCH_*.json`` files are
+additionally copied to the repo root for the trajectory tooling.
+"""
 
 from __future__ import annotations
 
 import argparse
 import json
+import os
+import shutil
 import time
+
+from benchmarks import common
+
+
+def _write_json(name: str, payload: dict) -> str:
+    """Write a section's JSON under the out-dir + keep a root copy for the
+    trajectory tooling; returns the primary path."""
+    path = os.path.join(common.out_dir(), name)
+    os.makedirs(common.out_dir(), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    root_copy = os.path.join(os.path.dirname(__file__), "..", name)
+    shutil.copyfile(path, root_copy)
+    print(f"wrote {os.path.normpath(path)} "
+          f"(root copy {os.path.normpath(root_copy)})")
+    return path
 
 
 def bench_compile(quick: bool = False) -> None:
@@ -43,9 +67,7 @@ def bench_compile(quick: bool = False) -> None:
             print(f"  {model:12s} {design:9s} compile={cold:7.2f}s "
                   f"cached={warm*1e3:7.3f}ms plan={plan.total_time:.6g}s")
         out["models"][model] = rec
-    with open("BENCH_compile.json", "w") as f:
-        json.dump(out, f, indent=1)
-    print("wrote BENCH_compile.json")
+    _write_json("BENCH_compile.json", out)
 
 
 def bench_serve(quick: bool = False) -> None:
@@ -98,20 +120,65 @@ def bench_serve(quick: bool = False) -> None:
               f"continuous={cont_stats['gen_tok_s']:8.1f} tok/s "
               f"p99={cont_stats['p99_latency_s']:.3f}s "
               f"({speedup:.2f}x)")
-    with open("BENCH_serve.json", "w") as f:
-        json.dump(out, f, indent=1)
-    print("wrote BENCH_serve.json")
+    _write_json("BENCH_serve.json", out)
+
+
+def bench_pipeline(quick: bool = False) -> None:
+    """Stage-count x chip-count sweep of the pipeline-parallel pod planner
+    (DESIGN.md §7) -> fig_pipeline.csv.
+
+    Fails the section when the event-simulated steady-state interval
+    deviates more than 2x from the planner's estimate — the CI
+    ``pipeline-smoke`` job runs this with ``--fast``.
+    """
+    import dataclasses
+
+    from repro.chip.dse import pipeline_sweep
+    from repro.configs import get_config
+
+    models = ("opt_30b", "qwen3_14b")
+    rows = []
+    for model in models:
+        cfg = get_config(model)
+        if quick:
+            # truncate so every stage plan is exact and the planner's
+            # interval is simulated end-to-end (CI smoke scale)
+            cfg = dataclasses.replace(cfg, num_layers=min(cfg.num_layers, 8))
+        rows += pipeline_sweep(cfg, num_chips_list=(1, 2, 4),
+                               sim_layers=8 if quick else 12)
+    from benchmarks.common import emit
+    emit("fig_pipeline", rows)
+    bad = [r for r in rows
+           if r["plan_sim_ratio"] != "" and not
+           0.5 <= r["plan_sim_ratio"] <= 2.0]
+    if bad:
+        raise RuntimeError(
+            "simulated steady-state interval deviates >2x from the "
+            "planner's estimate: " + "; ".join(
+                f"{r['model']} chips={r['num_chips']} stages={r['stages']} "
+                f"ratio={r['plan_sim_ratio']}" for r in bad))
+    multi = [r for r in rows if r["num_chips"] == 4 and r["stages"] == 4]
+    for r in multi:
+        print(f"  {r['model']:10s} 4-chip pipeline {r['batch_interval_ms']}"
+              f" ms/decode-round vs replicated {r['replicated_ms']} ms "
+              f"({r['speedup_vs_replicated']}x)")
 
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
-    ap.add_argument("--quick", action="store_true",
+    ap.add_argument("--quick", "--fast", action="store_true", dest="quick",
                     help="small model set + core sections only")
     ap.add_argument("--section", action="append", default=None,
                     metavar="NAME",
                     help="run only the named section(s); 'compile' is an "
                          "alias for bench_compile (repeatable)")
+    ap.add_argument("--out-dir", default=None, metavar="DIR",
+                    help="directory for every section's JSON/CSV "
+                         "(default: experiments/bench/; BENCH_*.json are "
+                         "also copied to the repo root)")
     args = ap.parse_args(argv)
+    if args.out_dir:
+        common.set_out_dir(args.out_dir)
     quick = args.quick
     t0 = time.time()
     from benchmarks import paper_figs, roofline, validate_paper
@@ -119,6 +186,7 @@ def main(argv=None) -> None:
     sections = [
         ("bench_compile", lambda: bench_compile(quick)),
         ("bench_serve", lambda: bench_serve(quick)),
+        ("bench_pipeline", lambda: bench_pipeline(quick)),
         ("fig12_costmodel", paper_figs.fig12_costmodel),
         ("fig16_compile_time", paper_figs.fig16_compile_time),
         ("fig17_latency", paper_figs.fig17_latency),
@@ -135,7 +203,8 @@ def main(argv=None) -> None:
         ("multipod_table", roofline.multi_pod_table),
     ]
     if args.section:
-        aliases = {"compile": "bench_compile", "serve": "bench_serve"}
+        aliases = {"compile": "bench_compile", "serve": "bench_serve",
+                   "pipeline": "bench_pipeline"}
         wanted = {aliases.get(s, s) for s in args.section}
         known = {name for name, _ in sections}
         unknown = wanted - known
@@ -144,9 +213,9 @@ def main(argv=None) -> None:
                      f"known: {sorted(known)}")
         sections = [s for s in sections if s[0] in wanted]
     elif quick:
-        keep = {"bench_compile", "bench_serve", "fig12_costmodel",
-                "fig18_breakdown", "fig24_topology", "validate_paper",
-                "roofline_table"}
+        keep = {"bench_compile", "bench_serve", "bench_pipeline",
+                "fig12_costmodel", "fig18_breakdown", "fig24_topology",
+                "validate_paper", "roofline_table"}
         sections = [s for s in sections if s[0] in keep]
 
     failed = []
@@ -160,7 +229,7 @@ def main(argv=None) -> None:
             failed.append(name)
         print(f"----- {name} done in {time.time() - t:.1f}s")
     print(f"\nall benchmarks finished in {time.time() - t0:.1f}s; "
-          f"CSVs in experiments/bench/")
+          f"outputs in {os.path.normpath(common.out_dir())}/")
     if failed:
         print(f"FAILED sections: {', '.join(failed)}")
         raise SystemExit(1)

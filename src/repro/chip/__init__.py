@@ -1,2 +1,2 @@
-from repro.chip.config import ChipConfig, ipu_mk2, ipu_pod4_hbm, tpu_v5e_pod, tpu_v5e_vmem  # noqa: F401
-from repro.chip.topology import TOPOLOGIES, LinkClass, TopologyModel, build_topology  # noqa: F401
+from repro.chip.config import ChipConfig, ipu_mk2, ipu_pod4_hbm, tpu_v5e_pod, tpu_v5e_pod_hier, tpu_v5e_vmem  # noqa: F401
+from repro.chip.topology import TOPOLOGIES, ChipView, LinkClass, TopologyModel, build_topology  # noqa: F401

@@ -9,8 +9,8 @@ from __future__ import annotations
 
 import dataclasses
 
-from repro.chip.topology import (TOPOLOGIES, TopologyModel, build_topology,
-                                 near_square_grid)
+from repro.chip.topology import (TOPOLOGIES, ChipView, TopologyModel,
+                                 build_topology, near_square_grid)
 
 # Registry key into chip/topology.TOPOLOGIES ("all2all", "mesh2d",
 # "torus2d", "ring", "hier_pod", ...); kept as a plain str alias so the
@@ -138,6 +138,11 @@ class ChipConfig:
         tier for multi-class topologies)."""
         return self.topo.occupancy(exec_bytes, preload_bytes, dist_bytes)
 
+    def chip_view(self) -> ChipView:
+        """One member chip of this pod + the inter-chip tier a pipeline
+        stage boundary crosses (DESIGN.md §7)."""
+        return self.topo.chip_view()
+
     def scaled(self, **kw) -> "ChipConfig":
         return dataclasses.replace(self, **kw)
 
@@ -202,6 +207,21 @@ def tpu_v5e_pod(num_chips: int = 256) -> ChipConfig:
         sram_port_blocking=False,           # HBM not blocked by ICI traffic
         reserved_per_core=0,
     )
+
+
+def tpu_v5e_pod_hier(num_chips: int = 256, groups: int = 4) -> ChipConfig:
+    """The TPU pod read as a hierarchical multi-chip pod (DESIGN.md §7):
+    ``groups`` islands of chips, each island an all2all ICI domain, behind a
+    thinner DCN-like tier.  This is the pod model the pipeline-parallel
+    planner partitions the layer stack over."""
+    flat = tpu_v5e_pod(num_chips)
+    return flat.scaled(
+        name=f"tpu-v5e-{num_chips}x{groups}",
+        topology="hier_pod",
+        num_chips=groups,
+        mesh_dims=(0, 0),
+        inter_bw_ratio=0.1,               # DCN egress ~5 GB/s per link
+        inter_links_per_chip=max(num_chips // (4 * groups), 1))
 
 
 def tpu_v5e_vmem() -> ChipConfig:

@@ -1,16 +1,20 @@
-"""Topology design-space sweep (paper §6.4), shared by
-``examples/dse_explore.py`` and ``benchmarks/paper_figs.fig24_topology``.
+"""Design-space sweeps, shared by ``examples/dse_explore.py`` and the
+benchmark sections.
 
-One row per (topology, design): the compiled plan's latency plus an
-event-simulated latency on a small layer truncation (the simulator
-exercises the per-link-class contention the plan estimate approximates),
-and the topology's routing summary.
+* :func:`topology_sweep` (paper §6.4) — one row per (topology, design):
+  the compiled plan's latency plus an event-simulated latency on a small
+  layer truncation (the simulator exercises the per-link-class contention
+  the plan estimate approximates), and the topology's routing summary.
+* :func:`pipeline_sweep` (DESIGN.md §7) — stage-count x chip-count sweep
+  of the pipeline-parallel pod planner: steady-state interval vs the
+  replicated single-chip baseline, with a simulated interval on a layer
+  truncation to validate the planner's estimate.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Sequence
+from typing import Callable, Optional, Sequence
 
 from repro.chip.config import ChipConfig, ipu_pod4_hbm
 
@@ -55,5 +59,78 @@ def topology_sweep(cfg, topologies: Sequence[str], *, batch: int = 32,
                 "delivery_tbps": round(t.preload_delivery_bw / 1e12, 3),
                 "bisection_tbps": round(t.bisection_bw / 1e12, 3),
                 "mean_preload_number": round(p.mean_preload_number, 2),
+            })
+    return rows
+
+
+def scale_pod(base: ChipConfig, num_chips: int) -> ChipConfig:
+    """Scale a pod config to ``num_chips`` chips, keeping per-chip
+    resources (cores, HBM share, controllers) fixed."""
+    n0 = max(base.num_chips, 1)
+    per_cores = base.cores_per_chip
+    per_hbm = base.hbm_bw / n0
+    per_ctrl = max(base.hbm_controllers // n0, 1)
+    return base.scaled(name=f"{base.name}-x{num_chips}",
+                       num_chips=num_chips,
+                       num_cores=per_cores * num_chips,
+                       hbm_bw=per_hbm * num_chips,
+                       hbm_controllers=per_ctrl * num_chips)
+
+
+def pipeline_sweep(cfg, *, num_chips_list: Sequence[int] = (1, 2, 4),
+                   stage_counts: Optional[Sequence[int]] = None,
+                   batch: int = 32, seq: int = 2048,
+                   design: str = "ELK-Full", max_orders: int = 4,
+                   sim_layers: int = 8,
+                   chip_factory: Callable[..., ChipConfig] = ipu_pod4_hbm,
+                   ) -> list[dict]:
+    """Stage-count x chip-count sweep of the pipeline-parallel planner.
+
+    Each row pairs the planner's steady-state decode interval for the whole
+    running batch (``microbatches * bottleneck interval``) with the
+    replicated single-chip baseline (every chip serves ``batch/num_chips``
+    requests with a full model replica) and with an event-simulated
+    interval on a ``sim_layers`` truncation — the planner estimate the CI
+    gate holds to within 2x.
+    """
+    from repro.chip.simulator import simulate_pipeline
+    from repro.core.pipeline_pod import plan_pipeline, replicated_plan
+
+    base = chip_factory(topology="hier_pod")
+    rows = []
+    for n in num_chips_list:
+        pod = scale_pod(base, n)
+        for s in (stage_counts or (n,)):
+            if s > n or s > cfg.num_layers:
+                continue
+            pp = plan_pipeline(cfg, pod, batch=batch, seq=seq,
+                               design=design, num_stages=s,
+                               max_orders=max_orders)
+            rep = replicated_plan(cfg, pod, batch=batch, seq=seq,
+                                  design=design, max_orders=max_orders)
+            # simulate on a truncation: exact (non-extrapolated) stage
+            # plans, same per-link-class contention machinery
+            sim_cfg = dataclasses.replace(
+                cfg, num_layers=min(cfg.num_layers, max(sim_layers, s)))
+            pps = plan_pipeline(sim_cfg, pod, batch=batch, seq=seq,
+                                design=design, num_stages=s,
+                                max_orders=max_orders)
+            sim = simulate_pipeline(pps, pod)
+            rows.append({
+                "model": cfg.name, "num_chips": n, "stages": pp.num_stages,
+                "microbatch": pp.microbatch,
+                "microbatches": pp.microbatches,
+                "cuts": "/".join(str(st.layers[1]) for st in pp.stages),
+                "interval_ms": round(pp.interval * 1e3, 3),
+                "batch_interval_ms": round(pp.batch_interval * 1e3, 3),
+                "fill_ms": round(pp.fill_time * 1e3, 3),
+                "replicated_ms": round(rep.total_time * 1e3, 3),
+                "speedup_vs_replicated": round(
+                    rep.total_time / pp.batch_interval, 3)
+                if pp.batch_interval else "",
+                "sim_layers": sim_cfg.num_layers,
+                "sim_interval_ms": round(sim.interval * 1e3, 3),
+                "plan_sim_ratio": round(sim.interval / pps.interval, 3)
+                if pps.interval else "",
             })
     return rows

@@ -32,10 +32,14 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Optional
+from typing import TYPE_CHECKING, Optional
 
 from repro.chip.config import ChipConfig
-from repro.core.plan import Breakdown, ExecutionPlan, Utilization
+from repro.core.graph import OpGraph
+from repro.core.plan import (Breakdown, ExecutionPlan, OpTiming, Utilization)
+
+if TYPE_CHECKING:
+    from repro.core.pipeline_pod import PipelinePlan
 
 _EPS = 1e-12
 
@@ -121,8 +125,13 @@ def simulate(plan: ExecutionPlan, chip: ChipConfig,
             return False
         return space_used + preload_space(j) <= cap_mem + _EPS
 
-    def start_next_preload():
+    def start_next_preload(force: bool = False):
         nonlocal next_pre, hbm_flow, hbm_left, hbm_op, space_used
+        if hbm_op >= 0:
+            # a preload is already streaming (§4.5 rule 2: one at a time);
+            # clobbering it here leaked its space and left it forever un-done,
+            # deadlocking the sim when its op came up for execution
+            return
         while next_pre < n:
             j = pi[next_pre]
             if pre_done[j]:
@@ -133,7 +142,16 @@ def simulate(plan: ExecutionPlan, chip: ChipConfig,
                 next_pre += 1
                 continue
             if not can_start_preload(j):
-                return
+                # ``force`` models streaming-through under space pressure:
+                # when the whole chip is otherwise stalled (execution waits
+                # on this preload chain and nothing else is active), the
+                # hardware streams the tile through space freed as the
+                # blocking residents execute; the fluid accounting lets
+                # ``space_used`` transiently exceed the cap instead of
+                # wedging.  Routing deps are never forced.
+                if not force or (graph.ops[j].preload_dep >= 0 and
+                                 exe_done[graph.ops[j].preload_dep] < 0):
+                    return
             p = dec[j].preload_plan
             hbm_op = j
             # per-request HBM latency + volume roofline (bugfix: the seed
@@ -185,6 +203,12 @@ def simulate(plan: ExecutionPlan, chip: ChipConfig,
                     pre_done[cur] = True     # defensive: zero-data op
                     start_exec()
                     continue
+                if exe_phase == "idle" and next_pre < n:
+                    # space-blocked with nothing draining: stream the next
+                    # preload through (see start_next_preload)
+                    start_next_preload(force=True)
+                    if hbm_op >= 0:
+                        continue
                 if exe_phase == "idle":
                     break
 
@@ -289,3 +313,99 @@ def simulate(plan: ExecutionPlan, chip: ChipConfig,
     breakdown = Breakdown(preload_only=busy_hbm, execute_only=busy_exec,
                           overlapped=overlap, interconnect_stall=idle)
     return SimResult(total, breakdown, util, exe_done)
+
+
+# ---------------------------------------------------------------------------
+# pipeline-parallel pod simulation (DESIGN.md §7)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class PipelineSimResult:
+    total_time: float              # last microbatch leaves the last stage
+    interval: float                # steady per-microbatch completion period
+    fill_time: float               # first microbatch end-to-end
+    stage_intervals: list          # per-stage steady interval (event-sim)
+    microbatch_end: list           # per-microbatch completion times
+
+
+def _tile_plan(plan: ExecutionPlan, copies: int) -> ExecutionPlan:
+    """Concatenate ``copies`` repetitions of a stage plan into one plan:
+    running it through the event simulator models a stage serving
+    back-to-back microbatches, where copy ``c+1``'s preloads overlap copy
+    ``c``'s execution under the same per-link-class contention the
+    single-pass simulation uses."""
+    g = plan.graph
+    n = len(g.ops)
+    ops = []
+    for c in range(copies):
+        for op in g.ops:
+            if op.preload_dep >= 0:
+                op = dataclasses.replace(op, preload_dep=op.preload_dep
+                                         + c * n)
+            ops.append(op)
+    graph = OpGraph(g.model, g.phase, tuple(ops), g.layer_span,
+                    g.num_layers * copies)
+    order = [c * n + j for c in range(copies) for j in plan.preload_order]
+    decs = [dataclasses.replace(d, op_idx=c * n + d.op_idx)
+            for c in range(copies) for d in plan.decisions]
+    timing = [OpTiming() for _ in ops]
+    return ExecutionPlan(graph, plan.chip_name, plan.design, decs, order,
+                         timing, 0.0, Breakdown(), Utilization())
+
+
+def simulate_pipeline(pplan: "PipelinePlan", chip: ChipConfig,
+                      microbatches: Optional[int] = None
+                      ) -> PipelineSimResult:
+    """Event-simulate a :class:`PipelinePlan`: every stage runs its
+    microbatch stream on a member chip (``chip_view()``) with the
+    per-link-class contention machinery, and inter-stage activation
+    transfers cross the inter-chip tier — serialized per boundary (each
+    boundary is the sending chip's own gateway links on ``hier_pod``; a
+    bisection share on flat pools), so a slow tier backs the pipeline up
+    exactly like any other contended resource.
+
+    Stage plans must be exact (non-extrapolated): truncate the model before
+    planning when simulating deep stacks, as the DSE sweeps do.
+    """
+    view = chip.chip_view()
+    M = microbatches if microbatches is not None else pplan.microbatches
+    M = max(M, 1)
+    for st in pplan.stages:
+        if st.plan.extrapolated_from_layers:
+            raise ValueError(
+                "simulate_pipeline needs exact stage plans; plan a layer "
+                "truncation of the model for simulation (stage "
+                f"{st.index} extrapolated from "
+                f"{st.plan.extrapolated_from_layers} layers)")
+    # a one-stage plan was compiled against the whole pod (degenerate
+    # single-chip path); multi-stage plans against the member chip view
+    member = chip if len(pplan.stages) == 1 else view.chip
+    # per-stage microbatch completion times under intra-chip contention
+    ends = []
+    for st in pplan.stages:
+        n = len(st.plan.graph.ops)
+        res = simulate(_tile_plan(st.plan, M), member)
+        ends.append([res.op_exec_end[(c + 1) * n - 1] for c in range(M)])
+    # compose stages: microbatch m enters stage s after its predecessor on
+    # the same stage finishes and after its own activation arrives over the
+    # boundary (sends on one boundary are serialized in microbatch order)
+    S = len(pplan.stages)
+    t = [[0.0] * M for _ in range(S)]
+    for s in range(S):
+        durs = [ends[s][0]] + [ends[s][c] - ends[s][c - 1]
+                               for c in range(1, M)]
+        send_prev_end = 0.0
+        for m in range(M):
+            if s == 0:
+                arrive = 0.0
+            else:
+                start = max(t[s - 1][m], send_prev_end)
+                send_prev_end = start + pplan.stages[s - 1].send_time
+                arrive = send_prev_end
+            prev = t[s][m - 1] if m else 0.0
+            t[s][m] = max(arrive, prev) + durs[m]
+    out = t[S - 1]
+    interval = ((out[M - 1] - out[0]) / (M - 1)) if M > 1 else out[0]
+    stage_ivals = [((e[M - 1] - e[0]) / (M - 1)) if M > 1 else e[0]
+                   for e in ends]
+    return PipelineSimResult(out[M - 1], interval, out[0], stage_ivals, out)

@@ -49,6 +49,24 @@ class LinkClass:
     hop_latency: float   # per-hop latency on this tier (s)
 
 
+@dataclasses.dataclass(frozen=True)
+class ChipView:
+    """Projection of a pod topology onto one member chip (DESIGN.md §7).
+
+    ``chip`` is a ``ChipConfig`` describing a single member chip — the pod's
+    per-chip core pool, SRAM, and HBM share with ``num_chips=1``, so its own
+    ``topo`` exposes only the intra-chip link classes.  ``inter_bw`` /
+    ``inter_latency`` expose the inter-chip tier a stage-to-stage activation
+    flow crosses: the bandwidth one chip-pair boundary can sustain (one
+    chip's gateway links on ``hier_pod``; a bisection share on flat pools)
+    and the per-transfer latency across the tier.
+    """
+    chip: "ChipConfig"
+    num_chips: int
+    inter_bw: float
+    inter_latency: float
+
+
 def near_square_grid(n: int) -> tuple[int, int]:
     """Near-square factorization of ``n`` cores into a 2D grid.
 
@@ -99,6 +117,7 @@ class TopologyModel:
     kind = "base"
 
     def __init__(self, chip: "ChipConfig"):
+        self._chip = chip
         self.num_cores = chip.num_cores
         self.num_chips = max(chip.num_chips, 1)
         self.cores_per_chip = chip.cores_per_chip
@@ -168,6 +187,30 @@ class TopologyModel:
             t = max(t, (exec_bytes * rw + preload_bytes * pw
                         + dist_bytes * dw) * inv)
         return t
+
+    def chip_view(self) -> ChipView:
+        """Project the pod onto one member chip (DESIGN.md §7).
+
+        The member ``ChipConfig`` keeps this chip's share of every per-chip
+        resource (cores, SRAM, HBM bandwidth and controllers) with
+        ``num_chips=1``, so planning against it sees only intra-chip link
+        classes.  The inter-chip tier is exposed separately as the bandwidth
+        one stage-to-stage boundary sustains.  Flat pools (no distinct inter
+        tier) attribute a bisection share per chip-pair boundary; a
+        single-chip config projects to itself with the full on-chip
+        bisection as the (never-crossed) boundary bandwidth.
+        """
+        chip = self._chip
+        n = self.num_chips
+        if n <= 1:
+            return ChipView(chip, 1, self.bisection_bw, chip.link_latency)
+        member = chip.scaled(
+            name=f"{chip.name}/chip",
+            num_cores=self.cores_per_chip, num_chips=1,
+            hbm_bw=chip.hbm_bw / n,
+            hbm_controllers=max(chip.hbm_controllers // n, 1))
+        return ChipView(member, n, self.bisection_bw / max(n - 1, 1),
+                        2 * chip.link_latency)
 
     def signature(self) -> tuple:
         """Hashable identity for compile-pipeline cache keys (memoized)."""
@@ -315,9 +358,33 @@ class HierPodTopology(TopologyModel):
 
     @cached_property
     def dist_latency(self) -> float:
-        # one intra hop to the gateway + one (slower) inter-chip hop
+        # one intra hop to the gateway + one (slower) inter-chip hop; a
+        # single-chip pod never crosses the gateway, so it must match the
+        # corresponding flat all2all chip exactly (degenerate equivalence,
+        # tests/test_pipeline_pod.py)
         by = {lc.name: lc.hop_latency for lc in self.classes}
+        if self.num_chips <= 1:
+            return by["intra"]
         return by["intra"] + by["inter"]
+
+    def chip_view(self) -> ChipView:
+        chip = self._chip
+        n = self.num_chips
+        if n <= 1:
+            by = {lc.name: lc.hop_latency for lc in self.classes}
+            return ChipView(chip, 1, self.bisection_bw, by["intra"])
+        member = chip.scaled(
+            name=f"{chip.name}/chip",
+            num_cores=self.cores_per_chip, num_chips=1,
+            hbm_bw=chip.hbm_bw / n,
+            hbm_controllers=max(chip.hbm_controllers // n, 1))
+        # one boundary = the sending chip's gateway links; hops: one intra
+        # hop to the gateway + one inter-chip hop
+        by = {lc.name: lc.hop_latency for lc in self.classes}
+        return ChipView(member, n,
+                        chip.inter_links_per_chip * chip.link_bw
+                        * chip.inter_bw_ratio,
+                        by["intra"] + by["inter"])
 
     def _signature(self) -> tuple:
         return super()._signature() + (self.frac_dist_inter,

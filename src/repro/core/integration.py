@@ -24,10 +24,16 @@ import dataclasses
 import math
 from typing import Optional
 
-from repro.chip.config import MB, ChipConfig, tpu_v5e_pod, tpu_v5e_vmem
+from repro.chip.config import (MB, ChipConfig, tpu_v5e_pod, tpu_v5e_pod_hier,
+                               tpu_v5e_vmem)
 from repro.core.elk import compile_model
 from repro.core.graph import Phase
+from repro.core.plan import ExecutionPlan
 from repro.models.config import ModelConfig
+
+# share of the on-chip store the gather-ahead window may occupy; the other
+# half stays execution state (the §3 space split at pod level)
+_PREFETCH_SRAM_SHARE = 0.5
 
 
 @dataclasses.dataclass(frozen=True)
@@ -37,32 +43,86 @@ class PodKnobs:
     resident_fraction: float     # preload-state fraction f (1/k of weights)
     fsdp: bool                   # f < 1 => weights stay sharded (ZeRO-3)
     design: str = "ELK-Full"
+    # pipeline mode (DESIGN.md §7): filled when the pod plans the graph as
+    # pipeline stages across its chips instead of one flat core pool
+    num_stages: int = 1
+    stage_boundaries: tuple = ()     # layer cut points: stage s owns
+    #                                  [boundary[s-1], boundary[s])
+    microbatch: int = 0              # requests per microbatch
+    microbatches: int = 1            # concurrent microbatch groups
+    interval_s: float = 0.0          # steady per-microbatch interval
+    batch_interval_s: float = 0.0    # one decode round of the whole batch
+
+
+def _plan_knobs(plan: ExecutionPlan, chip: ChipConfig) -> tuple[int, float]:
+    """(prefetch depth in layer-blocks, resident fraction) of one plan.
+
+    The prefetch-depth clamp is derived from capacity, not magic numbers:
+    the gather-ahead window may hold at most the layer-blocks that fit in
+    the prefetch share of the chip's on-chip store, and never fewer than
+    one block — the window cannot be empty while an op is executing (§4.5:
+    an operator must be preloaded before it executes).
+    """
+    lo, hi = plan.graph.layer_span
+    ops_per_layer = max(hi - lo, 1)
+    p_ops = max(plan.mean_preload_number, 0.0)
+    per_layer_hbm = sum(op.hbm_bytes
+                        for op in plan.graph.ops[lo:hi]) or 1
+    cap_layers = max(
+        int(chip.total_sram * _PREFETCH_SRAM_SHARE) // per_layer_hbm, 1)
+    p_layers = min(max(math.ceil(p_ops / ops_per_layer), 1), cap_layers)
+    fr = [d.preload_plan.frac for d in plan.decisions
+          if d.preload_plan is not None and plan.graph.ops[d.op_idx].hbm_bytes]
+    f = sum(fr) / len(fr) if fr else 1.0
+    return p_layers, f
 
 
 def pod_plan(cfg: ModelConfig, *, batch: int, seq: int,
              phase: Phase = "decode", num_chips: int = 256,
-             design: str = "ELK-Full") -> PodKnobs:
-    """Run the faithful ELK compiler against the pod-as-ICCA-chip model and
-    translate its decisions to runtime knobs.
+             design: str = "ELK-Full", chip: Optional[ChipConfig] = None,
+             mode: str = "flat",
+             num_stages: Optional[int] = None) -> PodKnobs:
+    """Run the faithful ELK compiler against the pod model and translate
+    its decisions to runtime knobs.
+
+    ``mode="flat"`` (default) reads the whole pod as one ICCA chip, exactly
+    as before.  ``mode="pipeline"`` partitions the layer stack into
+    pipeline stages across the pod's chips (``core.pipeline_pod``) and
+    additionally returns the stage boundaries, microbatch knobs and the
+    steady-state interval the serving stack sizes admission from.
 
     Repeat calls for the same (model, shape, design) hit the process-level
-    plan cache (DESIGN.md §2), so the serving/training stacks can ask for
-    knobs on the request path without recompiling.
+    plan caches (DESIGN.md §2, §7), so the serving/training stacks can ask
+    for knobs on the request path without recompiling.
     """
-    chip = tpu_v5e_pod(num_chips)
+    if mode not in ("flat", "pipeline"):
+        raise ValueError(f"unknown pod_plan mode {mode!r}")
+    if mode == "pipeline":
+        from repro.core.pipeline_pod import plan_pipeline
+        chip = chip or tpu_v5e_pod_hier(num_chips)
+        pp = plan_pipeline(cfg, chip, batch=batch, seq=seq, phase=phase,
+                           design=design, num_stages=num_stages)
+        # knobs from the bottleneck stage: its plan paces the pipeline
+        bottleneck = max(pp.stages,
+                         key=lambda st: st.interval + st.send_time)
+        member = chip.chip_view().chip if pp.num_stages > 1 else chip
+        depth, f = _plan_knobs(bottleneck.plan, member)
+        return PodKnobs(prefetch_depth=depth, resident_fraction=f,
+                        fsdp=f < 0.999, design=design,
+                        num_stages=pp.num_stages,
+                        stage_boundaries=tuple(st.layers[1]
+                                               for st in pp.stages),
+                        microbatch=pp.microbatch,
+                        microbatches=pp.microbatches,
+                        interval_s=pp.interval,
+                        batch_interval_s=pp.batch_interval)
+    chip = chip or tpu_v5e_pod(num_chips)
     plan = compile_model(cfg, chip, batch=batch, seq=seq, phase=phase,
                          design=design, max_orders=8)
     # preload number: ops resident in preload state while one executes.
     # The pod runtime prefetches whole layer-blocks, so convert the mean
     # op-level preload number to layers: ops-per-layer is the graph period.
-    lo, hi = plan.graph.layer_span
-    ops_per_layer = max(hi - lo, 1)
-    p_ops = max(plan.mean_preload_number, 0.0)
-    p_layers = max(1, min(8, math.ceil(p_ops / ops_per_layer)))
-    # resident fraction: mean preload-state fraction of HBM-heavy ops
-    fr = [d.preload_plan.frac for d in plan.decisions
-          if d.preload_plan is not None and plan.graph.ops[d.op_idx].hbm_bytes]
-    f = sum(fr) / len(fr) if fr else 1.0
+    p_layers, f = _plan_knobs(plan, chip)
     return PodKnobs(prefetch_depth=p_layers, resident_fraction=f,
                     fsdp=f < 0.999, design=design)
 

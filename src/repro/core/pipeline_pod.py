@@ -1,0 +1,443 @@
+"""Pipeline-parallel pod planner (DESIGN.md §7).
+
+The compile stack so far plans one operator graph onto one flat ICCA chip;
+the pod flavors (``hier_pod``, the IPU-POD4 emulator target) were only a
+contention model.  This module partitions the graph into **pipeline stages
+across the chips of a pod**:
+
+* the layer stack is cut at decoder-layer boundaries into ``S`` contiguous
+  stages, one per member chip (``chip_view()`` projects the pod topology
+  onto one chip's intra-chip link classes);
+* each stage's sub-graph is scheduled with the unmodified inductive
+  :class:`~repro.core.scheduler.Scheduler` through **one shared**
+  :class:`~repro.core.pipeline.CompileContext` — identical layers across
+  stages hit the same Pareto-curve and allocation-window caches, and stage
+  sub-graph signatures key a per-search plan memo;
+* the cut points come from a **DP over layer boundaries** minimizing the
+  steady-state bottleneck ``max_s(stage interval + inter-stage activation
+  transfer on the inter-chip tier)``;
+* the result is a :class:`PipelinePlan`: per-stage ``ExecutionPlan``s, the
+  steady-state interval, fill/drain and microbatch knobs.
+
+Steady-state interval
+---------------------
+A pipelined stage serves a stream of *independent* microbatches (distinct
+request groups under continuous batching), so consecutive microbatches
+software-pipeline on the chip: microbatch ``m+1``'s preloads overlap
+microbatch ``m``'s execution.  The stage's steady-state interval is
+therefore the bottleneck *serial resource* of its plan — the HBM/delivery
+chain (§4.5: preloads are served sequentially) or the execution chain —
+not the plan's end-to-end latency, which pays the fill ramp every pass.
+The replicated baseline (one full-model plan per chip) cannot hide that
+ramp: decode step ``t+1`` of the *same* requests needs step ``t``'s
+sampled token, so each step pays the plan's full ``total_time``.  That
+fill/stall amortization is exactly what the pipeline buys; both sides of
+the comparison stream identical HBM bytes per token.
+
+Degenerate case: one stage (or a one-chip pod) returns today's single-chip
+plan unchanged — bit-identical, test-pinned.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+from repro.chip.config import ChipConfig
+from repro.chip.topology import ChipView
+from repro.core.graph import OpGraph, Phase, build_graph
+from repro.core.partition import op_curve_signature
+from repro.core.pipeline import CompileContext, PlanCache
+from repro.core.plan import ExecutionPlan
+from repro.models.config import ModelConfig
+
+_INF = math.inf
+
+
+# ---------------------------------------------------------------------------
+# plan artifacts
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class StagePlan:
+    """One pipeline stage: a contiguous layer range on one member chip."""
+    index: int
+    layers: tuple[int, int]        # [lo, hi) decoder-layer range
+    graph: OpGraph                 # exact stage sub-graph (conservation)
+    plan: ExecutionPlan            # per-microbatch schedule (may extrapolate)
+    time: float                    # per-microbatch stage latency
+    interval: float                # steady-state per-microbatch interval
+    send_bytes: int                # activation bytes to the next stage
+    send_time: float               # inter-chip-tier transfer estimate
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelinePlan:
+    """A graph partitioned into pipeline stages across a pod."""
+    model: str
+    phase: Phase
+    chip_name: str
+    design: str
+    num_chips: int
+    batch: int                     # total in-flight requests
+    microbatch: int                # requests per microbatch
+    microbatches: int              # concurrent microbatch groups (>= stages)
+    stages: tuple[StagePlan, ...]
+    interval: float                # steady-state per-microbatch bottleneck
+    batch_interval: float          # microbatches * interval: one decode
+    #                                round of the whole running batch
+    fill_time: float               # first microbatch end-to-end latency
+    total_time: float              # fill + (microbatches-1) * interval
+
+    @property
+    def num_stages(self) -> int:
+        return len(self.stages)
+
+    @property
+    def total_flops(self) -> float:
+        """Per-microbatch FLOPs over all stage sub-graphs (conserved across
+        cuts — fuzz-tested against the unpartitioned graph)."""
+        return sum(op.flops for st in self.stages for op in st.graph.ops)
+
+    @property
+    def hbm_bytes(self) -> int:
+        """Per-microbatch off-chip bytes over all stage sub-graphs."""
+        return sum(op.hbm_bytes for st in self.stages for op in st.graph.ops)
+
+
+# ---------------------------------------------------------------------------
+# graph slicing
+# ---------------------------------------------------------------------------
+
+def _layer_starts(g: OpGraph) -> tuple[dict[int, int], int, int]:
+    """First op index per decoder layer + the [first, end) span of all
+    layer ops (ops outside it are the prefix/suffix: embed, encoder,
+    final norm, lm_head)."""
+    starts: dict[int, int] = {}
+    first = len(g.ops)
+    last_end = 0
+    for i, op in enumerate(g.ops):
+        if op.layer >= 0:
+            first = min(first, i)
+            last_end = max(last_end, i + 1)
+            if op.layer not in starts:
+                starts[op.layer] = i
+    return starts, first, last_end
+
+
+def stage_subgraph(g: OpGraph, lo: int, hi: int, num_layers: int) -> OpGraph:
+    """The sub-graph of decoder layers [lo, hi); stage 0 keeps the prefix
+    ops (embed/frontends/encoder), the last stage keeps the suffix
+    (final norm, lm_head).  ``preload_dep`` indices are re-based; deps are
+    intra-layer (MoE router -> experts), so cuts at layer boundaries never
+    sever one."""
+    starts, first, last_end = _layer_starts(g)
+    off = starts[lo] if lo > 0 else 0
+    end = starts[hi] if hi < num_layers else len(g.ops)
+    sub = []
+    for op in g.ops[off:end]:
+        dep = op.preload_dep
+        if dep >= 0:
+            dep -= off
+            if dep < 0:            # severed dep (never at layer cuts)
+                dep = -1
+            op = dataclasses.replace(op, preload_dep=dep)
+        sub.append(op)
+    span_lo = starts[lo] - off
+    span_hi = (starts[lo + 1] - off) if lo + 1 < hi else \
+        (min(last_end, end) - off)
+    return OpGraph(f"{g.model}[{lo}:{hi}]", g.phase, tuple(sub),
+                   (span_lo, span_hi), hi - lo)
+
+
+# ---------------------------------------------------------------------------
+# steady-state interval of one stage plan
+# ---------------------------------------------------------------------------
+
+def steady_interval(plan: ExecutionPlan, chip: ChipConfig,
+                    ctx: Optional[CompileContext] = None) -> float:
+    """Throughput bound of a stage serving back-to-back microbatches: the
+    busier of the serial HBM/delivery chain (§4.5 rule 2) and the serial
+    execution chain, clamped to the plan's one-pass latency."""
+    cost = ctx.cost if ctx is not None else None
+    pre_bw = chip.preload_noc_bw
+    hbm = 0.0
+    for d in plan.decisions:
+        p = d.preload_plan
+        if p is None or not (p.hbm_bytes or p.noc_preload_bytes):
+            continue
+        if cost is not None:
+            t_hbm = cost.hbm_time(p.hbm_bytes)
+        else:
+            t_hbm = (p.hbm_bytes / chip.hbm_bw + chip.hbm_latency) \
+                if chip.hbm_bw else 0.0
+        hbm += max(t_hbm, p.noc_preload_bytes / pre_bw)
+    exe = sum(t.t_e_exe - t.t_s_exe for t in plan.timing)
+    if plan.total_time <= 0:
+        return max(hbm, exe)
+    return min(max(hbm, exe), plan.total_time)
+
+
+# ---------------------------------------------------------------------------
+# stage-cost search state
+# ---------------------------------------------------------------------------
+
+class _StageCosts:
+    """Memoized stage compiles for the cut DP.
+
+    Stage plans are keyed by the sub-graph's op-signature tuple (identical
+    layer stacks collapse every same-shape candidate range to one compile),
+    and every compile shares one ``CompileContext`` — curves and allocation
+    windows are computed once for the whole search.
+    """
+
+    def __init__(self, g: OpGraph, member: ChipConfig, design: str,
+                 max_orders: int, max_exact_ops: int):
+        self.g = g
+        self.member = member
+        self.design = design
+        self.max_orders = max_orders
+        self.max_exact_ops = max_exact_ops
+        self.ctx = CompileContext(member)
+        self.num_layers = g.num_layers
+        self._sigs = [op_curve_signature(op) for op in g.ops]
+        starts, first, last_end = _layer_starts(g)
+        self._starts, self._first, self._last_end = starts, first, last_end
+        # layer uniformity: identical per-layer signatures let deep stages
+        # extrapolate from truncations (MoE stacks with dense prefixes are
+        # not uniform and always schedule exactly)
+        sig0 = self._layer_sig(0)
+        self.uniform = all(self._layer_sig(i) == sig0
+                           for i in range(1, g.num_layers))
+        self._memo: dict = {}
+
+    def _layer_sig(self, i: int) -> tuple:
+        lo = self._starts[i]
+        hi = self._starts[i + 1] if i + 1 < self.num_layers else self._last_end
+        return tuple(self._sigs[lo:hi])
+
+    def _compile(self, sub: OpGraph) -> ExecutionPlan:
+        from repro.core.baselines import build_plan
+        return build_plan(sub, self.member, self.design,
+                          max_orders=self.max_orders, ctx=self.ctx)
+
+    def stage(self, lo: int, hi: int) -> tuple[OpGraph, ExecutionPlan,
+                                               float, float]:
+        """(sub-graph, plan, per-microbatch time, steady interval) for
+        decoder layers [lo, hi)."""
+        sub = stage_subgraph(self.g, lo, hi, self.num_layers)
+        key = (lo == 0, hi == self.num_layers,
+               tuple(self._sigs[self._op_lo(lo):self._op_hi(hi)]))
+        got = self._memo.get(key)
+        if got is None:
+            got = self._solve(sub, lo, hi)
+            self._memo[key] = got
+        plan, time, ival = got
+        return sub, plan, time, ival
+
+    def _op_lo(self, lo: int) -> int:
+        return self._starts[lo] if lo > 0 else 0
+
+    def _op_hi(self, hi: int) -> int:
+        return self._starts[hi] if hi < self.num_layers else len(self.g.ops)
+
+    def _solve(self, sub: OpGraph, lo: int, hi: int):
+        k = hi - lo
+        if len(sub.ops) <= self.max_exact_ops or not self.uniform or k <= 3:
+            plan = self._compile(sub)
+            return plan, plan.total_time, steady_interval(
+                plan, self.member, self.ctx)
+        # deep uniform stage: linear layer-count extrapolation from two
+        # truncations of the same flavor (both land in the memo, so every
+        # deep candidate range reuses them)
+        k2 = min(k - 1, 8)
+        k1 = max(k2 - 2, 1)
+        scale = (k - k2) / (k2 - k1)
+
+        def probe(kk: int):
+            # anchor the truncation to whichever end carries this stage's
+            # prefix/suffix ops, so embed and lm_head stay in both probes
+            if hi == self.num_layers and lo > 0:
+                s = stage_subgraph(self.g, hi - kk, hi, self.num_layers)
+            else:
+                s = stage_subgraph(self.g, lo, lo + kk, self.num_layers)
+            p = self._compile(s)
+            return p, p.total_time, steady_interval(p, self.member, self.ctx)
+
+        p1, t1, i1 = probe(k1)
+        p2, t2, i2 = probe(k2)
+        time = max(t2 + (t2 - t1) * scale, 0.0)
+        ival = max(i2 + (i2 - i1) * scale, 0.0)
+        plan = dataclasses.replace(p2, total_time=time,
+                                   extrapolated_from_layers=k2)
+        return plan, time, min(ival, time)
+
+
+# ---------------------------------------------------------------------------
+# cut-point DP
+# ---------------------------------------------------------------------------
+
+def _cut_dp(costs: _StageCosts, num_stages: int, send_time: float,
+            slack: Optional[int]) -> list[int]:
+    """Cut points minimizing ``max_s(interval_s + send_s)`` (ties broken by
+    total fill).  ``slack`` bands candidate stage depths around the
+    balanced ``ceil(L/S)`` to bound the number of stage compiles; the band
+    widens automatically if it admits no feasible partition."""
+    L, S = costs.num_layers, num_stages
+    base = -(-L // S)
+    if slack is None:
+        slack = L if L <= 16 else max(3, base // 3)
+
+    def run(band: int) -> Optional[list[int]]:
+        lo_k = max(1, base - band)
+        hi_k = min(L, base + band)
+
+        def stage_cost(a: int, b: int) -> float:
+            if not (lo_k <= b - a <= hi_k):
+                return _INF
+            _, _, _, ival = costs.stage(a, b)
+            return ival + (send_time if b < L else 0.0)
+
+        # f[s][l]: min bottleneck over first l layers in s stages
+        f = [[_INF] * (L + 1) for _ in range(S + 1)]
+        g = [[0.0] * (L + 1) for _ in range(S + 1)]    # fill tie-break
+        back = [[-1] * (L + 1) for _ in range(S + 1)]
+        f[0][0] = 0.0
+        for s in range(1, S + 1):
+            for l in range(s, L - (S - s) + 1):
+                for m in range(s - 1, l):
+                    if f[s - 1][m] == _INF:
+                        continue
+                    if not (lo_k <= l - m <= hi_k):
+                        continue
+                    c = stage_cost(m, l)
+                    if c == _INF:
+                        continue
+                    v = max(f[s - 1][m], c)
+                    fill = g[s - 1][m] + costs.stage(m, l)[2]
+                    if v < f[s][l] - 1e-15 or (
+                            abs(v - f[s][l]) <= 1e-15 and fill < g[s][l]):
+                        f[s][l], g[s][l], back[s][l] = v, fill, m
+        if f[S][L] == _INF:
+            return None
+        cuts, l = [], L
+        for s in range(S, 0, -1):
+            cuts.append(l)
+            l = back[s][l]
+        return list(reversed(cuts))        # S cut points, last == L
+
+    band = slack
+    while True:
+        cuts = run(band)
+        if cuts is not None:
+            return cuts
+        if band >= L:
+            raise RuntimeError(f"no feasible {S}-stage cut of {L} layers")
+        band = min(L, max(band * 2, 1))
+
+
+# ---------------------------------------------------------------------------
+# planner entry
+# ---------------------------------------------------------------------------
+
+_PIPE_CACHE = PlanCache(maxsize=64)
+
+
+def pipeline_cache() -> PlanCache:
+    return _PIPE_CACHE
+
+
+def plan_pipeline(cfg: ModelConfig, chip: ChipConfig, *, batch: int,
+                  seq: int, phase: Phase = "decode",
+                  design: str = "ELK-Full",
+                  num_stages: Optional[int] = None,
+                  microbatches: Optional[int] = None,
+                  max_orders: int = 4, max_exact_ops: int = 400,
+                  cut_slack: Optional[int] = None,
+                  cache: bool = True) -> PipelinePlan:
+    """Partition ``cfg``'s operator graph into pipeline stages across the
+    chips of ``chip`` (a pod config: ``num_chips >= 1``).
+
+    ``num_stages`` defaults to the pod's chip count; ``microbatches``
+    defaults to the stage count (the minimum keeping every stage busy in
+    steady state).  The per-microbatch request count is
+    ``ceil(batch / microbatches)``.
+
+    A one-stage (or one-chip) plan degenerates to today's single-chip
+    compile path, bit-identical (test-pinned).
+    """
+    S = num_stages if num_stages is not None else max(chip.num_chips, 1)
+    S = max(1, min(S, max(chip.num_chips, 1), cfg.num_layers))
+    M = microbatches if microbatches is not None else S
+    M = max(M, S)
+    key = (cfg, chip, chip.topo_signature, batch, seq, phase, design, S, M,
+           max_orders, max_exact_ops)
+    if cache:
+        hit = _PIPE_CACHE.get(key)
+        if hit is not None:
+            return hit
+
+    from repro.core.elk import compile_model
+
+    if S == 1:
+        plan = compile_model(cfg, chip, batch=batch, seq=seq, phase=phase,
+                             design=design, max_orders=max_orders)
+        g = build_graph(cfg, batch=batch, seq=seq, phase=phase)
+        st = StagePlan(0, (0, cfg.num_layers), g, plan, plan.total_time,
+                       plan.total_time, 0, 0.0)
+        pp = PipelinePlan(cfg.name, phase, chip.name, design,
+                          max(chip.num_chips, 1), batch, batch, 1, (st,),
+                          plan.total_time, plan.total_time, plan.total_time,
+                          plan.total_time)
+        if cache:
+            _PIPE_CACHE.put(key, pp)
+        return pp
+
+    b = -(-batch // M)
+    view: ChipView = chip.chip_view()
+    g = build_graph(cfg, batch=b, seq=seq, phase=phase)
+    costs = _StageCosts(g, view.chip, design, max_orders, max_exact_ops)
+
+    starts, first, last_end = _layer_starts(g)
+    # activation crossing a layer boundary: the last op of the previous
+    # layer's output (rows x d_model for every supported family)
+    act_bytes = g.ops[(starts[1] if cfg.num_layers > 1 else last_end) - 1] \
+        .out_bytes
+    send_time = act_bytes / view.inter_bw + view.inter_latency
+
+    cuts = _cut_dp(costs, S, send_time, cut_slack)
+    stages = []
+    lo = 0
+    for i, hi in enumerate(cuts):
+        sub, plan, time, ival = costs.stage(lo, hi)
+        send_b = act_bytes if hi < cfg.num_layers else 0
+        send_t = send_time if hi < cfg.num_layers else 0.0
+        stages.append(StagePlan(i, (lo, hi), sub, plan, time, ival,
+                                send_b, send_t))
+        lo = hi
+    interval = max(st.interval + st.send_time for st in stages)
+    fill = sum(st.time + st.send_time for st in stages)
+    pp = PipelinePlan(cfg.name, phase, chip.name, design,
+                      max(chip.num_chips, 1), b * M, b, M, tuple(stages),
+                      interval, M * interval, fill,
+                      fill + (M - 1) * interval)
+    if cache:
+        _PIPE_CACHE.put(key, pp)
+    return pp
+
+
+def replicated_plan(cfg: ModelConfig, chip: ChipConfig, *, batch: int,
+                    seq: int, phase: Phase = "decode",
+                    design: str = "ELK-Full",
+                    max_orders: int = 4) -> ExecutionPlan:
+    """Data-parallel baseline: every member chip replicates the full model
+    and serves ``batch / num_chips`` requests.  Its steady-state interval
+    per pod decode round is the member plan's ``total_time`` — step ``t+1``
+    of the same requests cannot start before step ``t``'s sampled tokens,
+    so the per-step fill/stall is paid every round."""
+    from repro.core.elk import compile_model
+    view = chip.chip_view()
+    b = -(-batch // max(chip.num_chips, 1))
+    return compile_model(cfg, view.chip, batch=b, seq=seq, phase=phase,
+                         design=design, max_orders=max_orders)

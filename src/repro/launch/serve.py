@@ -69,6 +69,10 @@ def main() -> None:
                     choices=["bfloat16", "int8"])
     ap.add_argument("--prefetch-depth", type=int, default=0,
                     help="0 = ask the ELK scheduler (core.integration)")
+    ap.add_argument("--pipeline-pod", type=int, default=0, metavar="GROUPS",
+                    help="plan the pod as pipeline stages across GROUPS "
+                         "chip islands (DESIGN.md §7) and size admission "
+                         "from the steady-state interval (0 = flat pod)")
     ap.add_argument("--production-mesh", action="store_true")
     ap.add_argument("--trace", type=int, default=0, metavar="N",
                     help="serve N mixed-length requests with continuous "
@@ -91,11 +95,20 @@ def main() -> None:
     if args.prefetch_depth <= 0 and args.mode == "elk_stream":
         # plan against the config actually served: a smoke engine must not
         # run a prefetch depth chosen for the full-size model
+        pod = None
+        if args.pipeline_pod > 0:
+            from repro.chip.config import tpu_v5e_pod_hier
+            pod = tpu_v5e_pod_hier(groups=args.pipeline_pod)
         scfg = elk_serve_config(cfg, batch=args.batch,
                                 cache_capacity=args.cache,
-                                kv_dtype=args.kv_dtype)
-        print(f"ELK scheduler: prefetch_depth={scfg.prefetch_depth} "
-              f"prefill_chunk={scfg.prefill_chunk}")
+                                kv_dtype=args.kv_dtype,
+                                pipeline=args.pipeline_pod > 0, pod=pod)
+        msg = (f"ELK scheduler: prefetch_depth={scfg.prefetch_depth} "
+               f"prefill_chunk={scfg.prefill_chunk}")
+        if scfg.steady_interval_s:
+            msg += (f" steady_interval="
+                    f"{scfg.steady_interval_s * 1e3:.3f}ms")
+        print(msg)
     else:
         scfg = ServeConfig(
             batch=args.batch, cache_capacity=args.cache, mode=args.mode,

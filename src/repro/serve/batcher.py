@@ -7,8 +7,12 @@ instead (DESIGN.md §6):
 
 * a request **queue** admits work as it arrives;
 * requests **prefill in chunks** (``ServeConfig.prefill_chunk`` tokens per
-  scheduler tick, the admission budget the ELK plan sizes to the gather-
-  ahead window), interleaved with decode steps of the running batch;
+  scheduler tick), interleaved with decode steps of the running batch.
+  The admission budget comes from the ELK plan (``elk_serve_config``):
+  single-chip plans size it to the gather-ahead window; pipeline-pod plans
+  size it to the **steady-state interval** (DESIGN.md §7) — one interval's
+  worth of decode work bounds the prefill a tick may inject without
+  stalling the pipeline's bottleneck stage;
 * a prefilled request is **spliced into a free slot** of the engine's
   per-slot cache and decodes alongside whatever else is running;
 * a finished request **leaves its slot immediately** — the next queued
@@ -90,8 +94,10 @@ class ContinuousBatcher:
                  clock: Callable[[], float] = time.perf_counter):
         self.engine = engine
         self.slots = engine.scfg.slots
-        # a chunk larger than the cache capacity would wrap a request's
-        # own ring mid-chunk; clamp whatever the config asked for
+        # admission budget: the ELK-sized prefill chunk (gather-ahead window
+        # or pipeline steady-state interval, see elk_serve_config).  A chunk
+        # larger than the cache capacity would wrap a request's own ring
+        # mid-chunk; clamp whatever the config asked for.
         self.chunk_budget = max(1, min(engine.scfg.prefill_chunk,
                                        engine.scfg.cache_capacity))
         self.clock = clock

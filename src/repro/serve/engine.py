@@ -54,6 +54,8 @@ class ServeConfig:
     kv_dtype: str = "bfloat16"        # bfloat16 | int8
     max_slots: int = 0                # continuous batching slots (0 = batch)
     prefill_chunk: int = 32           # max prompt tokens per scheduler tick
+    steady_interval_s: float = 0.0    # pipeline-pod steady-state interval
+    #                                   (0 = single-chip plan, no pipeline)
 
     @property
     def slots(self) -> int:
@@ -62,7 +64,8 @@ class ServeConfig:
 
 def elk_serve_config(cfg: ModelConfig, *, batch: int, cache_capacity: int,
                      kv_dtype: str = "bfloat16", num_chips: int = 256,
-                     design: str = "ELK-Full") -> ServeConfig:
+                     design: str = "ELK-Full", pipeline: bool = False,
+                     pod=None) -> ServeConfig:
     """ServeConfig with the serving knobs chosen by the ELK scheduler.
 
     ``pod_plan`` reads the process-level plan cache (DESIGN.md §2), so this
@@ -71,20 +74,33 @@ def elk_serve_config(cfg: ModelConfig, *, batch: int, cache_capacity: int,
 
     * ``prefetch_depth`` — the paper's preload number p, per layer-block.
     * ``prefill_chunk``  — admission budget for chunked prefill: how many
-      prompt tokens one scheduler tick may process.  Sized to the gather-
-      ahead window (16 tokens of chunk compute per preloaded block keeps
-      the chunk hidden behind the window's ICI traffic), clamped to the
-      cache capacity so one chunk never wraps a request's own ring.
+      prompt tokens one scheduler tick may process.
+
+      Single-chip plans size it to the gather-ahead window (16 tokens of
+      chunk compute per preloaded block keeps the chunk hidden behind the
+      window's ICI traffic).  With ``pipeline=True`` the pod is planned as
+      pipeline stages (DESIGN.md §7) and admission is sized from the
+      **steady-state interval** instead: the whole running batch decodes
+      once per ``batch_interval``, so one interval hides up to
+      ``microbatch * num_stages`` prompt tokens of prefill — that is the
+      per-tick admission budget.  Both are clamped to the cache capacity
+      so one chunk never wraps a request's own ring.
     """
     from repro.core.integration import pod_plan
 
     knobs = pod_plan(cfg, batch=batch, seq=cache_capacity, phase="decode",
-                     num_chips=num_chips, design=design)
+                     num_chips=num_chips, design=design,
+                     mode="pipeline" if pipeline else "flat", chip=pod)
     depth = max(knobs.prefetch_depth, 1)
-    chunk = min(max(16, min(16 * depth, 128)), cache_capacity)
+    if pipeline and knobs.num_stages > 1:
+        per_interval = max(knobs.microbatch * knobs.num_stages, 16)
+        chunk = min(per_interval, 128, cache_capacity)
+    else:
+        chunk = min(max(16, min(16 * depth, 128)), cache_capacity)
     return ServeConfig(batch=batch, cache_capacity=cache_capacity,
                        mode="elk_stream", prefetch_depth=depth,
-                       kv_dtype=kv_dtype, prefill_chunk=chunk)
+                       kv_dtype=kv_dtype, prefill_chunk=chunk,
+                       steady_interval_s=knobs.interval_s)
 
 
 class ServeEngine:

@@ -1,0 +1,277 @@
+"""Pipeline-parallel pod planner tests (DESIGN.md §7).
+
+Covers the issue's acceptance criteria and satellites:
+
+* degenerate equivalence — one stage / one chip is bit-identical to the
+  single-chip compile path, and ``hier_pod`` with ``num_chips=1`` matches
+  the corresponding flat ``all2all`` chip (flow weights, delivery
+  bandwidth, plans);
+* conservation — ``PipelinePlan`` conserves total FLOPs and HBM bytes
+  across arbitrary stage cuts (fuzzed);
+* simulator agreement — ``simulate_pipeline`` within 2x of the planner's
+  steady-state interval on every shipped topology;
+* the 4-chip ``hier_pod`` pipeline beats replicating the single-chip
+  ELK-Full plan per chip on opt_30b decode;
+* ``pod_plan`` knob regressions: default flat knobs unchanged, the
+  prefetch-depth clamp derived from capacity.
+"""
+
+import dataclasses
+
+import pytest
+
+from repro.chip.config import ChipConfig, ipu_pod4_hbm, tpu_v5e_pod
+from repro.chip.simulator import simulate_pipeline
+from repro.chip.topology import TOPOLOGIES, build_topology
+from repro.configs import get_config
+from repro.core.elk import compile_model
+from repro.core.graph import build_graph
+from repro.core.integration import pod_plan
+from repro.core.pipeline_pod import (plan_pipeline, replicated_plan,
+                                     stage_subgraph, steady_interval)
+
+POD = ipu_pod4_hbm(topology="hier_pod")
+
+
+def tiny_cfg(num_layers: int = 4, **kw):
+    return dataclasses.replace(get_config("opt_30b"),
+                               num_layers=num_layers, **kw)
+
+
+def plans_equal(a, b) -> bool:
+    """Bit-identical schedules: same timings, same per-op plan choices."""
+    if a.total_time != b.total_time or a.preload_order != b.preload_order:
+        return False
+    for da, db in zip(a.decisions, b.decisions):
+        if da.exec_plan.key() != db.exec_plan.key():
+            return False
+        fa = da.preload_plan.frac if da.preload_plan else None
+        fb = db.preload_plan.frac if db.preload_plan else None
+        if fa != fb:
+            return False
+    return True
+
+
+# ---------------------------------------------------------------------------
+# degenerate equivalence
+# ---------------------------------------------------------------------------
+
+class TestDegenerate:
+    def test_single_stage_is_single_chip_plan(self):
+        cfg = tiny_cfg()
+        pp = plan_pipeline(cfg, POD, batch=8, seq=256, num_stages=1)
+        ref = compile_model(cfg, POD, batch=8, seq=256, phase="decode",
+                            design="ELK-Full", max_orders=4)
+        assert pp.num_stages == 1 and pp.microbatches == 1
+        assert plans_equal(pp.stages[0].plan, ref)
+        assert pp.interval == ref.total_time
+        assert pp.batch_interval == ref.total_time
+        assert pp.total_time == ref.total_time
+
+    def test_single_chip_pod_degenerates(self):
+        cfg = tiny_cfg()
+        pod1 = dataclasses.replace(
+            POD, num_chips=1, num_cores=POD.cores_per_chip,
+            hbm_bw=POD.hbm_bw / 4, hbm_controllers=4)
+        pp = plan_pipeline(cfg, pod1, batch=8, seq=256)
+        assert pp.num_stages == 1
+        ref = compile_model(cfg, pod1, batch=8, seq=256, phase="decode",
+                            design="ELK-Full", max_orders=4)
+        assert plans_equal(pp.stages[0].plan, ref)
+
+    def test_chip_view_identity_for_single_chip(self):
+        chip = dataclasses.replace(POD, num_chips=1,
+                                   num_cores=POD.cores_per_chip)
+        view = chip.chip_view()
+        assert view.chip is chip
+        assert view.num_chips == 1
+
+
+# ---------------------------------------------------------------------------
+# hier_pod(num_chips=1) == flat all2all (satellite property test)
+# ---------------------------------------------------------------------------
+
+class TestHierPodDegeneratesToAll2All:
+    def pair(self):
+        base = dict(name="one-chip", num_cores=256, sram_per_core=256 * 1024,
+                    core_flops=1e11, core_flops_vector=1e10,
+                    sram_bw_per_core=2e9, link_bw=5e9, num_chips=1,
+                    hbm_bw=1e12, hbm_controllers=4)
+        hier = ChipConfig(topology="hier_pod", **base)
+        flat = ChipConfig(topology="all2all", **base)
+        return hier, flat
+
+    def test_flow_weights_and_delivery(self):
+        hier, flat = self.pair()
+        th, tf = build_topology(hier), build_topology(flat)
+        for kind in ("preload", "dist", "rot"):
+            wh = {c: w for c, w in th.flow_weights(kind).items() if w > 0}
+            wf = {c: w for c, w in tf.flow_weights(kind).items() if w > 0}
+            assert wh == wf
+        assert th.preload_delivery_bw == tf.preload_delivery_bw
+        assert th.dist_latency == tf.dist_latency
+        assert th.preload_latency == tf.preload_latency
+        assert th.dist_time_factor == tf.dist_time_factor == 1.0
+        assert th.rot_time_factor == tf.rot_time_factor == 1.0
+
+    @pytest.mark.parametrize("batch,seq", [(1, 64), (4, 64), (1, 256),
+                                           (4, 256)])
+    def test_plans_identical(self, batch, seq):
+        hier, flat = self.pair()
+        cfg = tiny_cfg(2)
+        ph = compile_model(cfg, hier, batch=batch, seq=seq, phase="decode",
+                           design="ELK-Full", max_orders=2)
+        pf = compile_model(cfg, flat, batch=batch, seq=seq, phase="decode",
+                           design="ELK-Full", max_orders=2)
+        assert plans_equal(ph, pf)
+
+
+# ---------------------------------------------------------------------------
+# conservation fuzz (satellite)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("num_layers,stages,batch", [
+    (2, 1, 4), (2, 2, 8), (3, 2, 32), (4, 3, 8), (4, 4, 32), (5, 4, 4),
+    (6, 3, 8), (7, 2, 32), (8, 4, 8)])
+def test_pipeline_conserves_flops_and_hbm_bytes(num_layers, stages, batch):
+    cfg = tiny_cfg(num_layers)
+    stages = min(stages, num_layers, POD.num_chips)
+    pp = plan_pipeline(cfg, POD, batch=batch, seq=256, num_stages=stages,
+                       max_orders=2)
+    g = build_graph(cfg, batch=pp.microbatch, seq=256, phase="decode")
+    assert pp.total_flops == pytest.approx(sum(op.flops for op in g.ops))
+    assert pp.hbm_bytes == sum(op.hbm_bytes for op in g.ops)
+    # cuts tile the layer range without overlap
+    spans = [st_.layers for st_ in pp.stages]
+    assert spans[0][0] == 0 and spans[-1][1] == cfg.num_layers
+    for (_, a), (b, _) in zip(spans, spans[1:]):
+        assert a == b
+
+
+def test_zero_cut_slack_widens_to_feasibility():
+    """A zero-width band that admits no partition (L % S != 0) must widen
+    instead of looping forever."""
+    cfg = tiny_cfg(7)
+    pp = plan_pipeline(cfg, POD, batch=8, seq=128, num_stages=4,
+                       cut_slack=0, max_orders=2)
+    assert pp.num_stages == 4
+    assert pp.stages[-1].layers[1] == 7
+
+
+def test_stage_subgraph_rebases_moe_preload_dep():
+    cfg = dataclasses.replace(
+        get_config("opt_30b"), num_layers=4, moe_experts=8, moe_top_k=2)
+    g = build_graph(cfg, batch=4, seq=64, phase="decode")
+    sub = stage_subgraph(g, 2, 4, 4)
+    for i, op in enumerate(sub.ops):
+        if op.preload_dep >= 0:
+            assert 0 <= op.preload_dep < len(sub.ops)
+            assert sub.ops[op.preload_dep].name.endswith("router")
+            assert sub.ops[op.preload_dep].layer == op.layer
+
+
+# ---------------------------------------------------------------------------
+# simulator agreement (acceptance: within 2x on every shipped topology)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("topo", sorted(TOPOLOGIES))
+def test_sim_interval_within_2x(topo):
+    cfg = tiny_cfg(8)
+    chip = ipu_pod4_hbm(topology=topo)
+    pp = plan_pipeline(cfg, chip, batch=32, seq=2048)
+    sim = simulate_pipeline(pp, chip)
+    ratio = sim.interval / pp.interval
+    assert 0.5 <= ratio <= 2.0, (topo, ratio)
+
+
+def test_sim_rejects_extrapolated_stages():
+    # 80 layers over 2 stages: ~40-layer stage graphs exceed the exact-op
+    # budget and extrapolate from truncations; simulating those would
+    # misreport per-microbatch durations, so it must refuse
+    cfg = get_config("llama2_70b")
+    pod2 = dataclasses.replace(POD, num_chips=2)
+    pp = plan_pipeline(cfg, pod2, batch=8, seq=256, num_stages=2,
+                       cut_slack=2, max_orders=2)
+    assert any(st_.plan.extrapolated_from_layers for st_ in pp.stages)
+    with pytest.raises(ValueError, match="exact stage plans"):
+        simulate_pipeline(pp, pod2)
+
+
+# ---------------------------------------------------------------------------
+# acceptance: 4-chip hier_pod pipeline beats per-chip replication (opt_30b)
+# ---------------------------------------------------------------------------
+
+def test_pipeline_beats_replicated_opt30b():
+    cfg = get_config("opt_30b")
+    pp = plan_pipeline(cfg, POD, batch=32, seq=2048)
+    rep = replicated_plan(cfg, POD, batch=32, seq=2048)
+    assert pp.num_stages == 4
+    # same tokens per steady-state decode round on both sides: the pipeline
+    # rotates 4 microbatches of 8 through the stages, the baseline serves 8
+    # requests per chip with a full replica
+    assert pp.batch_interval < rep.total_time
+    # the steady interval never exceeds the per-pass latency
+    for st_ in pp.stages:
+        assert st_.interval <= st_.time + 1e-12
+
+
+def test_steady_interval_bounds():
+    cfg = tiny_cfg(4)
+    member = POD.chip_view().chip
+    plan = compile_model(cfg, member, batch=8, seq=256, phase="decode",
+                         design="ELK-Full", max_orders=2)
+    ival = steady_interval(plan, member)
+    assert 0 < ival <= plan.total_time
+
+
+# ---------------------------------------------------------------------------
+# pod_plan knobs (satellite: capacity-derived clamp + regression pins)
+# ---------------------------------------------------------------------------
+
+class TestPodKnobs:
+    def test_default_flat_knobs_unchanged(self):
+        """Regression pin: the derived clamp keeps the pre-refactor knob
+        outputs for the default pod config."""
+        for model in ("llama2_13b", "qwen3_14b"):
+            k = pod_plan(get_config(model), batch=8, seq=64, phase="decode")
+            assert k.prefetch_depth == 3
+            assert k.fsdp
+            assert k.resident_fraction == pytest.approx(0.9738175675675675)
+            assert k.num_stages == 1 and k.stage_boundaries == ()
+
+    def test_clamp_derived_from_capacity(self):
+        """The prefetch-depth clamp comes from how many layer-blocks fit
+        in the prefetch share of the on-chip store: shrinking the store
+        under the derived plan clamps the depth down to the one-block
+        floor, without touching the plan itself."""
+        from repro.core.integration import _plan_knobs
+
+        cfg = get_config("llama2_13b")
+        chip = tpu_v5e_pod(256)
+        plan = compile_model(cfg, chip, batch=8, seq=64, phase="decode",
+                             design="ELK-Full", max_orders=8)
+        depth, _ = _plan_knobs(plan, chip)
+        assert depth == 3                  # capacity ample: search decides
+        lo, hi = plan.graph.layer_span
+        per_layer = sum(op.hbm_bytes for op in plan.graph.ops[lo:hi])
+        # store sized to half a block of prefetch budget -> floor of 1
+        small = chip.scaled(sram_per_core=per_layer // chip.num_cores)
+        assert _plan_knobs(plan, small)[0] == 1
+        # store sized to exactly two blocks of prefetch budget -> cap 2
+        mid = chip.scaled(sram_per_core=4 * per_layer // chip.num_cores)
+        assert _plan_knobs(plan, mid)[0] == 2
+
+    def test_pipeline_mode_returns_stage_knobs(self):
+        cfg = tiny_cfg(8)
+        k = pod_plan(cfg, batch=32, seq=2048, chip=POD, mode="pipeline")
+        assert k.num_stages == 4
+        assert len(k.stage_boundaries) == 4
+        assert k.stage_boundaries[-1] == 8
+        assert k.microbatch * k.microbatches >= 32
+        assert k.interval_s > 0
+        assert k.batch_interval_s == pytest.approx(
+            k.microbatches * k.interval_s)
+
+    def test_pod_plan_rejects_unknown_mode(self):
+        with pytest.raises(ValueError, match="mode"):
+            pod_plan(tiny_cfg(2), batch=4, seq=64, mode="ring")
