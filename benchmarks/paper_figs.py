@@ -23,6 +23,35 @@ from repro.core.elk import compare_designs, compile_model
 from repro.core.graph import build_graph
 
 
+def fig_fusion() -> list[dict]:
+    """Fusion-on vs fusion-off round time per §6.1 design on the
+    compute-intensive prefill configs (DESIGN.md §8): where the fused MLP
+    chain pays off, and that the base-vs-fused selection never regresses
+    a design that gains nothing from it."""
+    import dataclasses
+
+    chip = default_chip()
+    rows = []
+    for model, seq in (("dit_xl", 256), ("opt_30b", 512)):
+        cfg = dataclasses.replace(get_config(model), num_layers=8)
+        off = compare_designs(cfg, chip, batch=1, seq=seq, phase="prefill",
+                              designs=("Static", "ELK-Full"), cache=False)
+        on = compare_designs(cfg, chip, batch=1, seq=seq, phase="prefill",
+                             designs=("Static", "ELK-Full"), fusion=True,
+                             cache=False)
+        for d in off:
+            rows.append({
+                "model": model, "design": d,
+                "latency_off_ms": round(off[d].total_time * 1e3, 4),
+                "latency_on_ms": round(on[d].total_time * 1e3, 4),
+                "fused_graph_won": on[d].fusion,
+                "gain_pct": round(
+                    (1 - on[d].total_time / off[d].total_time) * 100, 3),
+            })
+    emit("fig_fusion", rows)
+    return rows
+
+
 def fig12_costmodel() -> list[dict]:
     """Cost-model accuracy: linear-tree regressor vs the analytic ground
     truth (the paper fits against profiled IPU tiles; no IPU exists here,

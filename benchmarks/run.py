@@ -164,6 +164,62 @@ def bench_pipeline(quick: bool = False) -> None:
               f"({r['speedup_vs_replicated']}x)")
 
 
+def bench_fusion(quick: bool = False) -> None:
+    """Inter-core fusion pass (DESIGN.md §8) on the compute-intensive
+    prefill configs -> BENCH_fusion.json.
+
+    For dit_xl and opt_30b prefill, compiles ELK-Full with the fusion
+    knob off and on against one shared context and reports planner +
+    event-simulator round times.  Fails the section when fusion-on is
+    slower than fusion-off anywhere (the selection contract), when no
+    config improves, or when the simulator deviates more than 2x from the
+    planner on a fusion-on plan — the CI ``fusion-smoke`` job runs this.
+    """
+    import dataclasses
+
+    from repro.chip.config import ipu_pod4_hbm
+    from repro.chip.simulator import simulate
+    from repro.configs import get_config
+    from repro.core.elk import compile_model
+    from repro.core.pipeline import CompileContext
+
+    chip = ipu_pod4_hbm()
+    layers = 4 if quick else 8
+    configs = [("dit_xl", 256), ("opt_30b", 512)]
+    out: dict = {"chip": chip.name, "phase": "prefill", "layers": layers,
+                 "models": {}}
+    bad, gains = [], []
+    for model, seq in configs:
+        cfg = dataclasses.replace(get_config(model), num_layers=layers)
+        ctx = CompileContext(chip)
+        kw = dict(batch=1, seq=seq, phase="prefill", ctx=ctx, cache=False)
+        off = compile_model(cfg, chip, **kw)
+        on = compile_model(cfg, chip, fusion=True, **kw)
+        ratio = simulate(on, chip).total_time / on.total_time
+        gain = 1.0 - on.total_time / off.total_time
+        out["models"][model] = {
+            "seq": seq,
+            "plan_off_ms": round(off.total_time * 1e3, 5),
+            "plan_on_ms": round(on.total_time * 1e3, 5),
+            "fused_graph_won": on.fusion,
+            "gain_pct": round(gain * 100, 3),
+            "sim_plan_ratio": round(ratio, 3),
+        }
+        print(f"  {model:10s} off={off.total_time*1e3:8.4f}ms "
+              f"on={on.total_time*1e3:8.4f}ms fused={on.fusion} "
+              f"gain={gain*100:5.2f}% sim/plan={ratio:.2f}")
+        if on.total_time > off.total_time * (1 + 1e-9):
+            bad.append(f"{model}: fusion-on slower than fusion-off")
+        if not 0.5 <= ratio <= 2.0:
+            bad.append(f"{model}: sim/plan ratio {ratio:.2f} outside 2x")
+        gains.append(gain)
+    if max(gains) <= 0:
+        bad.append("fusion improved no compute-intensive config")
+    _write_json("BENCH_fusion.json", out)
+    if bad:
+        raise RuntimeError("; ".join(bad))
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--quick", "--fast", action="store_true", dest="quick",
@@ -187,6 +243,8 @@ def main(argv=None) -> None:
         ("bench_compile", lambda: bench_compile(quick)),
         ("bench_serve", lambda: bench_serve(quick)),
         ("bench_pipeline", lambda: bench_pipeline(quick)),
+        ("bench_fusion", lambda: bench_fusion(quick)),
+        ("fig_fusion", paper_figs.fig_fusion),
         ("fig12_costmodel", paper_figs.fig12_costmodel),
         ("fig16_compile_time", paper_figs.fig16_compile_time),
         ("fig17_latency", paper_figs.fig17_latency),
@@ -204,7 +262,7 @@ def main(argv=None) -> None:
     ]
     if args.section:
         aliases = {"compile": "bench_compile", "serve": "bench_serve",
-                   "pipeline": "bench_pipeline"}
+                   "pipeline": "bench_pipeline", "fusion": "bench_fusion"}
         wanted = {aliases.get(s, s) for s in args.section}
         known = {name for name, _ in sections}
         unknown = wanted - known
@@ -214,8 +272,8 @@ def main(argv=None) -> None:
         sections = [s for s in sections if s[0] in wanted]
     elif quick:
         keep = {"bench_compile", "bench_serve", "bench_pipeline",
-                "fig12_costmodel", "fig18_breakdown", "fig24_topology",
-                "validate_paper", "roofline_table"}
+                "bench_fusion", "fig12_costmodel", "fig18_breakdown",
+                "fig24_topology", "validate_paper", "roofline_table"}
         sections = [s for s in sections if s[0] in keep]
 
     failed = []

@@ -33,11 +33,15 @@ def compile_model(cfg: ModelConfig, chip: ChipConfig, *, batch: int,
                   max_orders: int = 24,
                   ctx: Optional[CompileContext] = None,
                   cache: bool = True,
-                  parallel: Optional[int] = None) -> ExecutionPlan:
+                  parallel: Optional[int] = None,
+                  fusion: bool = False) -> ExecutionPlan:
+    """``fusion=True`` enables the §8 inter-core fusion pass: the fused and
+    unfused graphs compile against one context and the faster plan wins
+    (``plan.fusion`` records whether the fused graph was selected)."""
     return compile_pipeline(cfg, chip, batch=batch, seq=seq, phase=phase,
                             design=design, max_exact_ops=max_exact_ops,
                             max_orders=max_orders, ctx=ctx, cache=cache,
-                            parallel=parallel)
+                            parallel=parallel, fusion=fusion)
 
 
 def compare_designs(cfg: ModelConfig, chip: ChipConfig, *, batch: int,
@@ -45,9 +49,13 @@ def compare_designs(cfg: ModelConfig, chip: ChipConfig, *, batch: int,
                     designs=("Basic", "Static", "ELK-Dyn", "ELK-Full",
                              "Ideal"),
                     ctx: Optional[CompileContext] = None,
+                    fusion: bool = False,
                     **kw) -> dict[str, ExecutionPlan]:
     """Compile every design against one shared ``CompileContext`` — curves
-    and allocation windows are computed once and reused across designs."""
+    and allocation windows are computed once and reused across designs.
+    ``fusion`` applies the §8 pass to every design; check ``plan.fusion``
+    per design to see where the fused graph actually won."""
     ctx = ctx or CompileContext(chip)
     return {d: compile_model(cfg, chip, batch=batch, seq=seq, phase=phase,
-                             design=d, ctx=ctx, **kw) for d in designs}
+                             design=d, ctx=ctx, fusion=fusion, **kw)
+            for d in designs}

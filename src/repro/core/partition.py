@@ -48,6 +48,10 @@ class ExecPlan:
     space: int             # per-core execution space (bytes)
     noc_exec_bytes: int    # total inter-core volume during execution
     sram_remote_bytes: int # per-core bytes served to peers (contention ③)
+    # True when this point runs the chain of a FusedOp as one SRAM pass
+    # (core/fusion.py); False on every plain-op plan and on the composed
+    # (store-reload) alternatives a fused curve carries.
+    fused: bool = False
 
     def key(self) -> tuple:
         return (self.split, self.chunk)
@@ -71,9 +75,15 @@ def op_curve_signature(op: Op) -> tuple:
     Identical layers produce ops with identical signatures (only ``name``/
     ``layer``/``preload_dep`` differ), so one curve computation serves every
     repetition — the ``PlanCurveCache`` in ``core.pipeline`` keys on this.
+
+    Op subclasses that enumerate differently (``core.fusion.FusedOp``)
+    expose ``curve_signature_extra``; appending it keeps a fused chain from
+    ever sharing a curve with a plain op of the same outer shape.
     """
-    return (op.kind, op.dims, op.reduce_dims, op.flops, op.out_bytes,
+    base = (op.kind, op.dims, op.reduce_dims, op.flops, op.out_bytes,
             tuple((t.dims, t.bytes_total, t.from_hbm) for t in op.inputs))
+    extra = getattr(op, "curve_signature_extra", None)
+    return base if extra is None else base + (extra,)
 
 
 def _pow2_splits(dim: int, cores: int) -> list[int]:

@@ -36,6 +36,9 @@ from typing import Optional
 
 from repro.chip.config import ChipConfig
 from repro.core.cost_model import AnalyticCostModel
+from repro.core.fusion import (FUSION_VERSION, FusedOp,
+                               enumerate_fused_exec_plans, fuse_graph,
+                               fusion_signature)
 from repro.core.graph import OpGraph, Phase, build_graph
 from repro.core.partition import (enumerate_exec_plans,
                                   enumerate_preload_plans,
@@ -85,12 +88,16 @@ class PlanCurveCache:
         return self._uids.get(id(plans))
 
     def exec_plans(self, op) -> list:
+        # FusedOp signatures carry curve_signature_extra (incl. the fusion
+        # version), so fused and plain curves can never share an entry
         sig = (op_curve_signature(op), self._topo_sig)
         got = self._exec.get(sig)
         if got is None:
             self.misses += 1
+            enum = (enumerate_fused_exec_plans if isinstance(op, FusedOp)
+                    else enumerate_exec_plans)
             got = self._exec[sig] = self._intern(
-                enumerate_exec_plans(op, self.chip, self.cost))
+                enum(op, self.chip, self.cost))
         else:
             self.hits += 1
         return got
@@ -196,6 +203,17 @@ class CompileContext:
                                                   phase=phase)
         return got
 
+    def fused_graph(self, cfg: ModelConfig, *, batch: int, seq: int,
+                    phase: Phase) -> OpGraph:
+        """The same graph after the §8 fusion pass (chip-gated on aggregate
+        SRAM).  Returns the base graph object itself when nothing fuses."""
+        key = (cfg, batch, seq, phase, "fused", FUSION_VERSION)
+        got = self._graphs.get(key)
+        if got is None:
+            base = self.graph(cfg, batch=batch, seq=seq, phase=phase)
+            got = self._graphs[key] = fuse_graph(base, self.chip)
+        return got
+
 
 # ---------------------------------------------------------------------------
 # process-level plan cache
@@ -255,55 +273,87 @@ def compile_pipeline(cfg: ModelConfig, chip: ChipConfig, *, batch: int,
                      max_orders: int = 24,
                      ctx: Optional[CompileContext] = None,
                      cache: bool = True,
-                     parallel: Optional[int] = None) -> ExecutionPlan:
+                     parallel: Optional[int] = None,
+                     fusion: bool = False) -> ExecutionPlan:
     """Run the full pass pipeline for one (model, chip, shape, design).
 
     ``ctx`` shares curve/window caches across calls (``compare_designs``
     passes one context for all five designs); ``cache=True`` additionally
     consults the process-level plan cache.  ``parallel`` evaluates §4.4
     candidate preload orders on a worker pool of that size.
+
+    ``fusion=True`` additionally compiles the §8 fused graph against the
+    same context and returns whichever plan is faster — fusion is applied
+    only where the scheduler's fused curves actually beat preload overlap,
+    and the result is never worse than the fusion-off plan.  The fusion
+    signature joins every plan-cache key (like ``topo_signature``), so the
+    two knob settings can never serve each other's entries.
     """
     if ctx is not None and type(ctx.cost) is not AnalyticCostModel:
         # plan-cache keys don't encode the cost model; a context with a
         # custom one must not poison (or read) default-cost entries
         cache = False
-    key = (cfg, chip, chip.topo_signature, batch, seq, phase, design,
-           max_exact_ops, max_orders)
+    key = (cfg, chip, chip.topo_signature, fusion_signature(fusion), batch,
+           seq, phase, design, max_exact_ops, max_orders)
     if cache:
         hit = _PLAN_CACHE.get(key)
         if hit is not None:
             return hit
     ctx = ctx or CompileContext(chip)
-    graph = ctx.graph(cfg, batch=batch, seq=seq, phase=phase)
-    if len(graph.ops) <= max_exact_ops:
-        plan = _exact_plan(cfg, chip, batch, seq, phase, design, max_orders,
-                           ctx, cache, parallel)
-    else:
-        plan = _extrapolated(cfg, chip, batch, seq, phase, design, max_orders,
-                             ctx, cache, parallel)
-        if design in ("ELK-Dyn", "ELK-Full"):
-            # ELK's search space contains every static configuration; linear
-            # layer-extrapolation is not monotonicity-preserving across
-            # designs, so re-impose dominance at the extrapolated level.
-            st = _extrapolated(cfg, chip, batch, seq, phase, "Static",
-                               max_orders, ctx, cache, parallel)
-            if st.total_time < plan.total_time:
-                plan = dataclasses.replace(st, design=design)
+    plan = _compile_variant(cfg, chip, batch, seq, phase, design,
+                            max_exact_ops, max_orders, ctx, cache, parallel,
+                            fused=False)
+    if fusion:
+        fgraph = ctx.fused_graph(cfg, batch=batch, seq=seq, phase=phase)
+        base_graph = ctx.graph(cfg, batch=batch, seq=seq, phase=phase)
+        fplan = None
+        if fgraph is not base_graph:
+            fplan = _compile_variant(cfg, chip, batch, seq, phase, design,
+                                     max_exact_ops, max_orders, ctx, cache,
+                                     parallel, fused=True)
+        if fplan is not None and fplan.total_time < plan.total_time:
+            plan = dataclasses.replace(fplan, fusion=True)
+        else:
+            # base graph won (or nothing fused): return a distinct object so
+            # the fusion-on cache entry never aliases the fusion-off one
+            plan = dataclasses.replace(plan, fusion=False)
     if cache:
         _PLAN_CACHE.put(key, plan)
     return plan
 
 
+def _compile_variant(cfg, chip, batch, seq, phase, design, max_exact_ops,
+                     max_orders, ctx, cache, parallel,
+                     fused: bool) -> ExecutionPlan:
+    graph = (ctx.fused_graph(cfg, batch=batch, seq=seq, phase=phase) if fused
+             else ctx.graph(cfg, batch=batch, seq=seq, phase=phase))
+    if len(graph.ops) <= max_exact_ops:
+        return _exact_plan(cfg, chip, batch, seq, phase, design, max_orders,
+                           ctx, cache, parallel, fused)
+    plan = _extrapolated(cfg, chip, batch, seq, phase, design, max_orders,
+                         ctx, cache, parallel, fused)
+    if design in ("ELK-Dyn", "ELK-Full"):
+        # ELK's search space contains every static configuration; linear
+        # layer-extrapolation is not monotonicity-preserving across
+        # designs, so re-impose dominance at the extrapolated level.
+        st = _extrapolated(cfg, chip, batch, seq, phase, "Static",
+                           max_orders, ctx, cache, parallel, fused)
+        if st.total_time < plan.total_time:
+            plan = dataclasses.replace(st, design=design)
+    return plan
+
+
 def _exact_plan(cfg, chip, batch, seq, phase, design, max_orders, ctx,
-                cache, parallel) -> ExecutionPlan:
-    key = (cfg, chip, chip.topo_signature, batch, seq, phase, design,
-           "exact", max_orders)
+                cache, parallel, fused: bool = False) -> ExecutionPlan:
+    key = (cfg, chip, chip.topo_signature, fusion_signature(fused), batch,
+           seq, phase, design, "exact", max_orders)
     if cache:
         hit = _PLAN_CACHE.get(key)
         if hit is not None:
             return hit
     from repro.core.baselines import build_plan
-    graph = ctx.graph(cfg, batch=batch, seq=seq, phase=phase)
+    graph = (ctx.fused_graph(cfg, batch=batch, seq=seq, phase=phase) if fused
+             else ctx.graph(cfg, batch=batch, seq=seq, phase=phase))
     plan = build_plan(graph, chip, design, max_orders=max_orders, ctx=ctx,
                       parallel=parallel)
     if cache:
@@ -321,7 +371,7 @@ def _layer_counts(cfg: ModelConfig) -> tuple[int, int]:
 
 
 def _extrapolated(cfg, chip, batch, seq, phase, design, max_orders, ctx,
-                  cache, parallel) -> ExecutionPlan:
+                  cache, parallel, fused: bool = False) -> ExecutionPlan:
     """Reduced-L schedule + linear extrapolation in the layer count.
 
     The two truncations share every curve (identical layer signatures) and
@@ -331,11 +381,13 @@ def _extrapolated(cfg, chip, batch, seq, phase, design, max_orders, ctx,
     l1, l2 = _layer_counts(cfg)
     cfg1 = dataclasses.replace(cfg, num_layers=l1)
     cfg2 = dataclasses.replace(cfg, num_layers=l2)
+    # byte/flop totals are fusion-invariant (a FusedOp sums its parts), so
+    # the base graph serves both variants' utilization arithmetic
     g_full = ctx.graph(cfg, batch=batch, seq=seq, phase=phase)
     p1 = _exact_plan(cfg1, chip, batch, seq, phase, design, max_orders, ctx,
-                     cache, parallel)
+                     cache, parallel, fused)
     p2 = _exact_plan(cfg2, chip, batch, seq, phase, design, max_orders, ctx,
-                     cache, parallel)
+                     cache, parallel, fused)
     if l1 == l2:
         return p2
 

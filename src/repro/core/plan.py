@@ -60,6 +60,9 @@ class ExecutionPlan:
     breakdown: Breakdown
     util: Utilization
     extrapolated_from_layers: int = 0  # 0 = exact full-model schedule
+    # True when the compile-level fusion knob was on AND the fused graph
+    # won the base-vs-fused selection (plan.graph then contains FusedOps).
+    fusion: bool = False
 
     @property
     def mean_preload_number(self) -> float:

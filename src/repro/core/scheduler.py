@@ -35,6 +35,7 @@ from repro.chip.config import ChipConfig
 from repro.core.allocator import (IncrementalWindow, WindowItem,
                                   _window_cost, core_to_allocation)
 from repro.core.cost_model import AnalyticCostModel
+from repro.core.fusion import graph_fusion_signature
 from repro.core.graph import OpGraph
 from repro.core.partition import ExecPlan, PreloadPlan
 from repro.core.pipeline import CompileContext
@@ -79,8 +80,9 @@ class Scheduler:
         self.exec_space_cap = exec_space_cap
         self.static_preload_frac = static_preload_frac
         self.exec_fastest = exec_fastest
-        # invariant per chip; cached off the property hot paths
+        # invariant per chip/graph; cached off the property hot paths
         self._topo_sig = chip.topo_signature
+        self._fusion_sig = graph_fusion_signature(graph)
         self._preload_bw = chip.preload_noc_bw
         self.curves = [self._curves(op) for op in graph.ops]
         self._pre_memo: dict = {}
@@ -119,8 +121,11 @@ class Scheduler:
                 return None
             parts.append((uid, it.fixed, it.fixed_choice))
         # topology signature: window costs fold in topology hop weights, so
-        # a topology change must miss (contexts are per-chip, but be explicit)
-        return (cap, self._topo_sig, tuple(parts))
+        # a topology change must miss (contexts are per-chip, but be
+        # explicit).  The fusion signature plays the same role for the §8
+        # pass: fused and unfused schedules share a context but must never
+        # share a window solve.
+        return (cap, self._topo_sig, self._fusion_sig, tuple(parts))
 
     # -- main entry -----------------------------------------------------------
     def schedule(self, preload_order: Optional[Sequence[int]] = None,

@@ -6,16 +6,16 @@ import jax
 
 from repro.kernels.decode_attention.kernel import decode_attention
 from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.dispatch import dispatch
 
 
 def decode_attn(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
                 slot_pos: jax.Array, q_pos, *, window: int = 0,
                 bk: int = 1024, force_kernel: bool = False) -> jax.Array:
-    if jax.default_backend() == "tpu":
-        return decode_attention(q, k_cache, v_cache, slot_pos, q_pos,
-                                window=window, bk=bk)
-    if force_kernel:
-        return decode_attention(q, k_cache, v_cache, slot_pos, q_pos,
-                                window=window, bk=bk, interpret=True)
-    return decode_attention_ref(q, k_cache, v_cache, slot_pos, q_pos,
-                                window=window)
+    return dispatch(
+        lambda interpret: decode_attention(q, k_cache, v_cache, slot_pos,
+                                           q_pos, window=window, bk=bk,
+                                           interpret=interpret),
+        lambda: decode_attention_ref(q, k_cache, v_cache, slot_pos, q_pos,
+                                     window=window),
+        force_kernel=force_kernel)

@@ -1,0 +1,58 @@
+"""Shared backend dispatch for the Pallas kernel wrappers.
+
+Every kernel package exposes the same three-way split: compiled Pallas on
+TPU, interpret-mode Pallas when explicitly forced on CPU (numerical tests),
+and the pure-jnp reference otherwise (fast CPU path for examples).  The
+pattern used to be copy-pasted across ``kernels/*/ops.py``; it lives here
+once so a new kernel gets it for free.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Callable
+
+import jax
+
+_FORCE = False
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def kernels_forced() -> bool:
+    """True while inside a ``force_kernels()`` block."""
+    return _FORCE
+
+
+@contextlib.contextmanager
+def force_kernels():
+    """Route every ``dispatch`` through the interpret-mode kernel.
+
+    The dispatch decision is taken at trace time, so cached jitted
+    callables would silently keep their old backend choice; entering and
+    leaving the block clears JAX's compilation caches to force a retrace.
+    Test-scoped by design — don't wrap a serving loop in this.
+    """
+    global _FORCE
+    prev = _FORCE
+    _FORCE = True
+    jax.clear_caches()
+    try:
+        yield
+    finally:
+        _FORCE = prev
+        jax.clear_caches()
+
+
+def dispatch(kernel_call: Callable[[bool], jax.Array],
+             ref_call: Callable[[], jax.Array], *,
+             force_kernel: bool = False) -> jax.Array:
+    """Run ``kernel_call(interpret)`` on TPU (compiled) or when forced
+    (interpret mode); otherwise the jnp oracle ``ref_call()``."""
+    if on_tpu():
+        return kernel_call(False)
+    if force_kernel or _FORCE:
+        return kernel_call(True)
+    return ref_call()

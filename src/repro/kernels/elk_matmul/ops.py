@@ -8,20 +8,17 @@ from __future__ import annotations
 
 import jax
 
+from repro.kernels.dispatch import dispatch
 from repro.kernels.elk_matmul.kernel import elk_matmul
 from repro.kernels.elk_matmul.ref import matmul_ref
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
 
 
 def matmul(x: jax.Array, y: jax.Array, *, bm: int = 256, bn: int = 256,
            bk: int = 512, force_kernel: bool = False) -> jax.Array:
     """Blocked matmul; Pallas on TPU, interpret-mode Pallas when forced on
     CPU (tests), jnp oracle otherwise (fast CPU path for examples)."""
-    if _on_tpu():
-        return elk_matmul(x, y, bm=bm, bn=bn, bk=bk)
-    if force_kernel:
-        return elk_matmul(x, y, bm=bm, bn=bn, bk=bk, interpret=True)
-    return matmul_ref(x, y)
+    return dispatch(
+        lambda interpret: elk_matmul(x, y, bm=bm, bn=bn, bk=bk,
+                                     interpret=interpret),
+        lambda: matmul_ref(x, y),
+        force_kernel=force_kernel)

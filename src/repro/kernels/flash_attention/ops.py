@@ -4,6 +4,7 @@ from __future__ import annotations
 
 import jax
 
+from repro.kernels.dispatch import dispatch
 from repro.kernels.flash_attention.kernel import flash_attention
 from repro.kernels.flash_attention.ref import mha_ref
 
@@ -12,10 +13,9 @@ def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
               causal: bool = True, window: int = 0,
               bq: int = 512, bk: int = 512,
               force_kernel: bool = False) -> jax.Array:
-    if jax.default_backend() == "tpu":
-        return flash_attention(q, k, v, causal=causal, window=window,
-                               bq=bq, bk=bk)
-    if force_kernel:
-        return flash_attention(q, k, v, causal=causal, window=window,
-                               bq=bq, bk=bk, interpret=True)
-    return mha_ref(q, k, v, causal=causal, window=window)
+    return dispatch(
+        lambda interpret: flash_attention(q, k, v, causal=causal,
+                                          window=window, bq=bq, bk=bk,
+                                          interpret=interpret),
+        lambda: mha_ref(q, k, v, causal=causal, window=window),
+        force_kernel=force_kernel)

@@ -1,0 +1,30 @@
+"""Jit'd public wrapper for the fused MLP (TPU kernel / CPU fallback)."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.kernels.dispatch import dispatch
+from repro.kernels.fused_mlp.kernel import fused_mlp_kernel
+from repro.kernels.fused_mlp.ref import fused_mlp_ref
+
+
+def fused_mlp(x: jax.Array, w_up: jax.Array, w_down: jax.Array, *,
+              w_gate: Optional[jax.Array] = None,
+              b_up: Optional[jax.Array] = None,
+              b_down: Optional[jax.Array] = None,
+              act: str = "silu", bm: int = 128, bf: int = 512,
+              force_kernel: bool = False) -> jax.Array:
+    """up-proj -> activation -> down-proj without storing the intermediate.
+
+    GLU when ``w_gate`` is given, plain MLP (optional fc biases) otherwise.
+    """
+    return dispatch(
+        lambda interpret: fused_mlp_kernel(x, w_up, w_down, w_gate, b_up,
+                                           b_down, act=act, bm=bm, bf=bf,
+                                           interpret=interpret),
+        lambda: fused_mlp_ref(x, w_up, w_down, w_gate=w_gate, b_up=b_up,
+                              b_down=b_down, act=act),
+        force_kernel=force_kernel)

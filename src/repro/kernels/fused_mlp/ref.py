@@ -1,0 +1,62 @@
+"""Pure-jnp oracle for the fused MLP kernel.
+
+``fused_mlp_ref`` is the exact einsum composition ``models.layers.mlp``
+used before the fused runtime path existed, so the default CPU dispatch
+is bit-identical to the historical model output; the kernel parity tests
+instead compare against ``composed_ref`` (matmul_ref + activation +
+matmul_ref), the per-matmul fp32-accumulate oracle the other kernels use.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+_ACT = {"silu": jax.nn.silu, "gelu": partial(jax.nn.gelu, approximate=True),
+        "relu": jax.nn.relu}
+
+
+def fused_mlp_ref(x: jax.Array, w_up: jax.Array, w_down: jax.Array, *,
+                  w_gate: Optional[jax.Array] = None,
+                  b_up: Optional[jax.Array] = None,
+                  b_down: Optional[jax.Array] = None,
+                  act: str = "silu") -> jax.Array:
+    a = _ACT[act]
+    if w_gate is not None:
+        gate = jnp.einsum("...d,df->...f", x, w_gate)
+        up = jnp.einsum("...d,df->...f", x, w_up)
+        return jnp.einsum("...d,df->...f", a(gate) * up, w_down)
+    h = jnp.einsum("...d,df->...f", x, w_up)
+    if b_up is not None:
+        h = h + b_up.astype(h.dtype)
+    h = a(h)
+    out = jnp.einsum("...d,df->...f", h, w_down)
+    if b_down is not None:
+        out = out + b_down.astype(out.dtype)
+    return out
+
+
+def composed_ref(x: jax.Array, w_up: jax.Array, w_down: jax.Array, *,
+                 w_gate: Optional[jax.Array] = None,
+                 b_up: Optional[jax.Array] = None,
+                 b_down: Optional[jax.Array] = None,
+                 act: str = "silu") -> jax.Array:
+    """matmul_ref + activation + matmul_ref — the kernel parity oracle."""
+    from repro.kernels.elk_matmul.ref import matmul_ref
+    a = _ACT[act]
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    if w_gate is not None:
+        h = a(matmul_ref(x2, w_gate)) * matmul_ref(x2, w_up)
+    else:
+        h = matmul_ref(x2, w_up)
+        if b_up is not None:
+            h = h + b_up.astype(h.dtype)
+        h = a(h)
+    out = matmul_ref(h.astype(x.dtype), w_down)
+    if b_down is not None:
+        out = out + b_down.astype(out.dtype)
+    return out.reshape(*lead, w_down.shape[-1])

@@ -1,0 +1,262 @@
+"""Inter-core fusion pass tests (DESIGN.md §8).
+
+Covers chain detection across architectures (GLU / plain+bias / RWKV
+channel-mix / MoE shared expert), the structural exclusions (residual-
+stream norms, recurrences, attention BMMs), the aggregate-SRAM gate,
+graph rewrite bookkeeping (preload_dep remap, layer_span), the fused
+Pareto curve, and the compile-level selection contract the ISSUE pins:
+fusion-on is never worse than fusion-off on any curated config and
+strictly better on dit_xl prefill, with the event simulator agreeing
+with the planner within 2x.
+"""
+
+import dataclasses
+
+import pytest
+
+from repro.chip.config import ipu_pod4_hbm
+from repro.chip.simulator import simulate
+from repro.configs import get_config
+from repro.core.elk import compare_designs, compile_model
+from repro.core.fusion import (FusedOp, enumerate_fused_exec_plans,
+                               find_fusable_chains, fuse_graph,
+                               fusion_signature, graph_fusion_signature)
+from repro.core.graph import build_graph
+from repro.core.partition import op_curve_signature
+from repro.core.pipeline import CompileContext, clear_plan_cache
+
+CHIP = ipu_pod4_hbm()
+
+# the ISSUE's curated configs: (name, phase, seq)
+CURATED = [("dit_xl", "prefill", 256), ("opt_30b", "prefill", 512),
+           ("llama2_13b", "prefill", 512), ("rwkv6_7b", "prefill", 512)]
+
+
+def _graph(name, layers=2, batch=1, seq=128, phase="prefill"):
+    cfg = dataclasses.replace(get_config(name), num_layers=layers)
+    return build_graph(cfg, batch=batch, seq=seq, phase=phase)
+
+
+def _chain_names(g, chains):
+    return sorted({" + ".join(o.name.split(".", 1)[-1] for o in g.ops[s:e])
+                   for s, e in chains})
+
+
+# ---------------------------------------------------------------------------
+# chain detection
+# ---------------------------------------------------------------------------
+
+class TestChainDetection:
+    def test_glu_chain(self):
+        g = _graph("llama2_13b")
+        chains = find_fusable_chains(g, CHIP)
+        assert _chain_names(g, chains) == ["gate_up + act + down"]
+        assert len(chains) == 2          # one per layer
+
+    def test_plain_chain_with_bias(self):
+        g = _graph("opt_30b")
+        chains = find_fusable_chains(g, CHIP)
+        assert _chain_names(g, chains) == ["fc1 + act + fc2"]
+
+    def test_rwkv_channel_mix_only(self):
+        """The channel-mix MLP fuses; the wkv recurrence (from_hbm state
+        input) must not."""
+        g = _graph("rwkv6_7b")
+        chains = find_fusable_chains(g, CHIP)
+        assert _chain_names(g, chains) == ["cm_k + cm_act + cm_v"]
+
+    def test_moe_shared_expert_fuses_router_does_not(self):
+        """llama4: the shared-expert MLP is a fusable chain, but
+        o -> ln2 -> router (a residual-stream norm feeding a square-ish
+        projection) must be rejected by the hourglass rule."""
+        g = _graph("llama4_maverick_400b_a17b")
+        names = _chain_names(g, find_fusable_chains(g, CHIP))
+        assert "shared_up + shared_act + shared_down" in names
+        assert all("router" not in n and "ln" not in n for n in names)
+
+    def test_attention_ops_never_fuse(self):
+        for name in ("llama2_13b", "opt_30b", "dit_xl"):
+            g = _graph(name)
+            for s, e in find_fusable_chains(g, CHIP):
+                for op in g.ops[s:e]:
+                    assert "qk" not in op.name and "softmax" not in op.name
+                    assert "av" not in op.name.split(".")[-1][:2]
+
+    def test_sram_gate(self):
+        """A chip too small to hold the chain's intermediate in aggregate
+        SRAM fuses nothing."""
+        tiny = dataclasses.replace(CHIP, num_cores=2)
+        g = _graph("opt_30b", seq=512)
+        assert find_fusable_chains(g, tiny) == []
+        assert fuse_graph(g, tiny) is g          # same object, no rewrite
+
+
+# ---------------------------------------------------------------------------
+# graph rewrite bookkeeping
+# ---------------------------------------------------------------------------
+
+class TestFuseGraph:
+    def test_op_count_and_layer_span(self):
+        g = _graph("llama2_13b")
+        f = fuse_graph(g, CHIP)
+        chains = find_fusable_chains(g, CHIP)
+        assert len(f.ops) == len(g.ops) - sum(e - s - 1 for s, e in chains)
+        s, e = f.layer_span
+        layers = {op.layer for op in f.ops[s:e]}
+        assert layers == {g.ops[g.layer_span[0]].layer}
+
+    def test_preload_dep_remap(self):
+        """MoE late-binding deps must point at the same op after the
+        rewrite shifts indices."""
+        g = _graph("llama4_maverick_400b_a17b")
+        f = fuse_graph(g, CHIP)
+        old = {op.name: g.ops[op.preload_dep].name
+               for op in g.ops if op.preload_dep >= 0}
+        new = {op.name.split("+")[0]: f.ops[op.preload_dep].name
+               for op in f.ops if op.preload_dep >= 0}
+        for name, dep in new.items():
+            if name in old:
+                assert old[name].split("+")[0] in dep
+
+    def test_fused_op_shape_accounting(self):
+        g = _graph("llama2_13b")
+        f = fuse_graph(g, CHIP)
+        fused = [op for op in f.ops if isinstance(op, FusedOp)]
+        assert fused
+        for op in fused:
+            a, b, c = op.parts
+            assert op.flops == a.flops + b.flops + c.flops
+            assert op.out_bytes == c.out_bytes
+            assert op.inter_bytes == max(a.out_bytes, b.out_bytes)
+            # both weight tensors stream from HBM: one merged preload
+            assert all(t.from_hbm for t in op.inputs[1:])
+            assert (sum(t.bytes_total for t in op.inputs[1:])
+                    == sum(t.bytes_total for p in (a, c)
+                           for t in p.inputs[1:]))
+
+    def test_name_suffix_layer_invariant(self):
+        """§4.4 order replay keys on name.split('.', 1)[-1]; fused names
+        must stay identical across identical layers."""
+        g = _graph("llama2_13b", layers=3)
+        f = fuse_graph(g, CHIP)
+        suffixes = {op.name.split(".", 1)[-1] for op in f.ops
+                    if isinstance(op, FusedOp)}
+        assert len(suffixes) == 1
+
+
+# ---------------------------------------------------------------------------
+# fused Pareto curve
+# ---------------------------------------------------------------------------
+
+class TestFusedCurve:
+    def _fused_op(self, name="dit_xl", seq=256):
+        f = fuse_graph(_graph(name, seq=seq), CHIP)
+        return next(op for op in f.ops if isinstance(op, FusedOp))
+
+    def test_curve_carries_both_alternatives(self):
+        op = self._fused_op()
+        curve = enumerate_fused_exec_plans(op, CHIP)
+        assert any(p.fused for p in curve)
+        assert any(not p.fused for p in curve)
+        # fastest/biggest first, strictly improving down-curve in space
+        for a, b in zip(curve, curve[1:]):
+            assert a.space >= b.space and a.time <= b.time
+
+    def test_feasible_and_signature(self):
+        op = self._fused_op()
+        curve = enumerate_fused_exec_plans(op, CHIP)
+        cap = CHIP.usable_sram_per_core
+        assert all(p.space <= cap for p in curve)
+        sig = op_curve_signature(op)
+        assert any("fused" in str(part) for part in sig)
+        assert sig != op_curve_signature(op.parts[0])
+
+    def test_fused_point_beats_composed_at_same_footprint(self):
+        """On an overhead-dominated op the fastest fused point must beat
+        the fastest composed point (in-stream activation vs a separate
+        vector op)."""
+        op = self._fused_op()
+        curve = enumerate_fused_exec_plans(op, CHIP)
+        best_f = min((p.time for p in curve if p.fused), default=None)
+        best_c = min(p.time for p in curve if not p.fused)
+        assert best_f is not None and best_f < best_c
+
+
+# ---------------------------------------------------------------------------
+# compile-level selection: the ISSUE acceptance pins
+# ---------------------------------------------------------------------------
+
+class TestSelection:
+    @pytest.fixture(scope="class")
+    def plans(self):
+        out = {}
+        for name, phase, seq in CURATED:
+            cfg = dataclasses.replace(get_config(name), num_layers=4)
+            ctx = CompileContext(CHIP)
+            kw = dict(batch=1, seq=seq, phase=phase, ctx=ctx, cache=False)
+            out[name] = (compile_model(cfg, CHIP, **kw),
+                         compile_model(cfg, CHIP, fusion=True, **kw))
+        return out
+
+    def test_never_worse_on_any_curated_config(self, plans):
+        for name, (off, on) in plans.items():
+            assert on.total_time <= off.total_time * (1 + 1e-12), name
+            assert off.fusion is False
+
+    def test_fusion_wins_on_dit_xl_prefill(self, plans):
+        off, on = plans["dit_xl"]
+        assert on.fusion is True
+        assert any(isinstance(op, FusedOp) for op in on.graph.ops)
+        # a genuine improvement, not float noise (ISSUE: "improves on at
+        # least one compute-intensive config")
+        assert on.total_time < off.total_time * 0.995
+
+    def test_fused_schedule_executes_fused_points(self, plans):
+        _, on = plans["dit_xl"]
+        fused_idx = {i for i, op in enumerate(on.graph.ops)
+                     if isinstance(op, FusedOp)}
+        picked = [d.exec_plan.fused for d in on.decisions
+                  if d.op_idx in fused_idx]
+        assert picked and all(picked)
+
+    def test_simulator_within_2x_of_planner(self, plans):
+        for name, (_, on) in plans.items():
+            sim = simulate(on, CHIP)
+            ratio = sim.total_time / on.total_time
+            assert 0.5 <= ratio <= 2.0, (name, ratio)
+
+    def test_selection_returns_distinct_objects(self, plans):
+        for name, (off, on) in plans.items():
+            assert off is not on
+            assert on.fusion == any(isinstance(op, FusedOp)
+                                    for op in on.graph.ops)
+
+    def test_compare_designs_knob(self):
+        cfg = dataclasses.replace(get_config("dit_xl"), num_layers=2)
+        res = compare_designs(cfg, CHIP, batch=1, seq=256, phase="prefill",
+                              designs=("Static", "ELK-Full"), fusion=True,
+                              cache=False)
+        assert set(res) == {"Static", "ELK-Full"}
+        for plan in res.values():
+            assert isinstance(plan.fusion, bool)
+
+
+# ---------------------------------------------------------------------------
+# cache signatures
+# ---------------------------------------------------------------------------
+
+class TestSignatures:
+    def test_fusion_signature_distinguishes_knob(self):
+        assert fusion_signature(True) != fusion_signature(False)
+
+    def test_graph_signature_distinguishes_fused_graph(self):
+        g = _graph("llama2_13b")
+        f = fuse_graph(g, CHIP)
+        assert graph_fusion_signature(g) != graph_fusion_signature(f)
+
+    def test_identical_layer_chains_share_curve_signature(self):
+        clear_plan_cache()
+        f = fuse_graph(_graph("llama2_13b", layers=3), CHIP)
+        sigs = {op_curve_signature(op) for op in f.ops
+                if isinstance(op, FusedOp)}
+        assert len(sigs) == 1            # one curve serves every layer

@@ -37,6 +37,28 @@ def test_smoke_forward_and_train_step(arch, rng):
     assert gn > 0, "gradients all zero"
 
 
+@pytest.mark.parametrize("arch", ["qwen3_14b", "whisper_tiny"])
+def test_forward_with_forced_fused_mlp(arch, rng):
+    """The fused-MLP runtime path (interpret-mode Pallas, GLU and plain
+    variants) must agree with the CPU einsum path at kernel tolerance —
+    the model-level twin of the kernels/fused_mlp parity sweep, proving
+    the §8 runtime wiring in models.layers.mlp changes backend, not
+    semantics."""
+    from repro.kernels.dispatch import force_kernels
+    cfg = get_smoke_config(arch)
+    params = T.init_params(rng, cfg)
+    B, S = 1, 8
+    tokens = jax.random.randint(rng, (B, S), 0, cfg.vocab_size)
+    fe = frontend_embeddings(cfg, B)
+    ref = T.forward_train(params, cfg, tokens, remat=False, **fe)
+    with force_kernels():
+        out = T.forward_train(params, cfg, tokens, remat=False, **fe)
+    err = float(jnp.max(jnp.abs(out.astype(jnp.float32)
+                                - ref.astype(jnp.float32))))
+    scale = float(jnp.max(jnp.abs(ref.astype(jnp.float32)))) + 1e-9
+    assert err / scale < 2e-2, f"{arch}: fused path diverges ({err})"
+
+
 @pytest.mark.parametrize("arch", ARCH_IDS)
 def test_decode_matches_forward(arch, rng):
     """prefill(S-1) + decode(1) last-token logits == forward(S) last-token

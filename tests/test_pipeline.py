@@ -216,3 +216,56 @@ class TestPlanIdentity:
                             max_orders=6, cache=False, parallel=2)
         assert par.total_time == serial.total_time
         assert par.preload_order == serial.preload_order
+
+
+# ---------------------------------------------------------------------------
+# fusion knob vs the caches (DESIGN.md §8 regression: toggling fusion must
+# never serve a stale entry, mirroring the topo_signature guarantees)
+# ---------------------------------------------------------------------------
+
+class TestFusionCacheKeys:
+    KW = dict(batch=32, seq=2048, phase="decode", design="ELK-Full")
+
+    def test_toggle_never_hits_stale_entry(self, small_cfg):
+        """off -> on -> off -> on through the process plan cache: the two
+        knob settings key separately, hit their own entries, and always
+        return distinct plan objects (even when the fused graph loses the
+        selection, the fusion-on result is a fresh replace())."""
+        clear_plan_cache()
+        off1 = compile_model(small_cfg, CHIP, **self.KW)
+        on1 = compile_model(small_cfg, CHIP, fusion=True, **self.KW)
+        off2 = compile_model(small_cfg, CHIP, **self.KW)
+        on2 = compile_model(small_cfg, CHIP, fusion=True, **self.KW)
+        assert off1 is off2 and on1 is on2      # each knob hits its entry
+        assert off1 is not on1                  # never a cross-knob hit
+        assert off1.fusion is False
+        assert isinstance(on1.fusion, bool)
+
+    def test_fusion_on_bit_identical_across_compiles(self, small_cfg):
+        """Two cold fusion-on compiles (fresh contexts, no process cache)
+        agree exactly — the fused curves, windows and selection are
+        deterministic."""
+        clear_plan_cache()
+        a = compile_model(small_cfg, CHIP, cache=False, fusion=True,
+                          ctx=CompileContext(CHIP), **self.KW)
+        b = compile_model(small_cfg, CHIP, cache=False, fusion=True,
+                          ctx=CompileContext(CHIP), **self.KW)
+        assert a.total_time == b.total_time
+        assert a.fusion == b.fusion
+        assert a.preload_order == b.preload_order
+        assert a.decisions == b.decisions
+
+    def test_shared_context_not_polluted_by_fusion(self, small_cfg):
+        """A fusion-on compile through a shared context must not perturb a
+        later fusion-off compile: window keys carry the graph's fusion
+        signature."""
+        clear_plan_cache()
+        cold = compile_model(small_cfg, CHIP, cache=False, **self.KW)
+        ctx = CompileContext(CHIP)
+        compile_model(small_cfg, CHIP, cache=False, fusion=True, ctx=ctx,
+                      **self.KW)
+        warm = compile_model(small_cfg, CHIP, cache=False, ctx=ctx,
+                             **self.KW)
+        assert warm.total_time == cold.total_time
+        assert warm.decisions == cold.decisions
+        assert warm.preload_order == cold.preload_order
