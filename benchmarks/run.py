@@ -18,6 +18,17 @@ import time
 from benchmarks import common
 
 
+def _coverage(obj) -> int:
+    """Recursive dict-key count — a cheap 'how much does this JSON cover'
+    measure used to catch a --quick run clobbering a full run's root copy
+    (fewer modes/models => strictly fewer keys)."""
+    if isinstance(obj, dict):
+        return len(obj) + sum(_coverage(v) for v in obj.values())
+    if isinstance(obj, list):
+        return sum(_coverage(v) for v in obj)
+    return 0
+
+
 def _write_json(name: str, payload: dict) -> str:
     """Write a section's JSON under the out-dir + keep a root copy for the
     trajectory tooling; returns the primary path."""
@@ -26,6 +37,17 @@ def _write_json(name: str, payload: dict) -> str:
     with open(path, "w") as f:
         json.dump(payload, f, indent=1)
     root_copy = os.path.join(os.path.dirname(__file__), "..", name)
+    if os.path.exists(root_copy):
+        try:
+            with open(root_copy) as f:
+                old = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            old = None
+        if old is not None and _coverage(payload) < _coverage(old):
+            print(f"WARNING: {name}: overwriting a fuller root copy "
+                  f"({_coverage(old)} keys) with a partial run "
+                  f"({_coverage(payload)} keys) — rerun without --quick "
+                  f"to restore full coverage")
     shutil.copyfile(path, root_copy)
     print(f"wrote {os.path.normpath(path)} "
           f"(root copy {os.path.normpath(root_copy)})")
@@ -220,6 +242,49 @@ def bench_fusion(quick: bool = False) -> None:
         raise RuntimeError("; ".join(bad))
 
 
+def bench_hybrid(quick: bool = False) -> None:
+    """Joint hybrid-parallelism sweep (DESIGN.md §9) -> BENCH_hybrid.json
+    + fig_hybrid.csv.
+
+    Pure pipeline vs the joint (cut x width x replicas x microbatch) plan
+    on a 4-chip pod across all five topologies, with the hybrid plan
+    event-simulated (replica servers + intra-stage collectives).  Fails
+    the section when hybrid's per-request time is worse than pipeline
+    anywhere (the planner is never-worse by construction, so that is a
+    regression) or when the simulated steady interval deviates more than
+    2x from the planner's — the CI ``hybrid-smoke`` job runs this with
+    ``--fast``.
+    """
+    from benchmarks.common import emit
+    from repro.chip.dse import hybrid_sweep
+
+    models = ("opt_30b",) if quick else ("opt_30b", "llama2_70b",
+                                         "kimi_k2_1t_a32b")
+    rows = hybrid_sweep(models, sim_layers=8)
+    emit("fig_hybrid", rows)
+    bad = []
+    for r in rows:
+        tag = f"{r['model']}/{r['topology']}"
+        if r["hybrid_req_us"] > r["pipe_req_us"] * (1 + 1e-9):
+            bad.append(f"{tag}: hybrid per-request {r['hybrid_req_us']}us "
+                       f"worse than pipeline {r['pipe_req_us']}us")
+        if r["plan_sim_ratio"] != "" and not \
+                0.5 <= r["plan_sim_ratio"] <= 2.0:
+            bad.append(f"{tag}: sim/plan ratio {r['plan_sim_ratio']} "
+                       f"outside 2x")
+        print(f"  {r['model']:16s} {r['topology']:8s} "
+              f"pipe={r['pipe_req_us']:9.3f}us/req "
+              f"hybrid={r['hybrid_req_us']:9.3f}us/req "
+              f"({r['hybrid_speedup']}x) w={r['widths']} r={r['replicas']} "
+              f"M={r['microbatches']} sim/plan={r['plan_sim_ratio']}")
+    out = {"num_chips": 4, "batch": 32, "seq": 2048, "sim_layers": 8,
+           "hybrid_wins": sum(r["hybrid_won"] for r in rows),
+           "rows": rows}
+    _write_json("BENCH_hybrid.json", out)
+    if bad:
+        raise RuntimeError("; ".join(bad))
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--quick", "--fast", action="store_true", dest="quick",
@@ -244,6 +309,7 @@ def main(argv=None) -> None:
         ("bench_serve", lambda: bench_serve(quick)),
         ("bench_pipeline", lambda: bench_pipeline(quick)),
         ("bench_fusion", lambda: bench_fusion(quick)),
+        ("bench_hybrid", lambda: bench_hybrid(quick)),
         ("fig_fusion", paper_figs.fig_fusion),
         ("fig12_costmodel", paper_figs.fig12_costmodel),
         ("fig16_compile_time", paper_figs.fig16_compile_time),
@@ -262,7 +328,8 @@ def main(argv=None) -> None:
     ]
     if args.section:
         aliases = {"compile": "bench_compile", "serve": "bench_serve",
-                   "pipeline": "bench_pipeline", "fusion": "bench_fusion"}
+                   "pipeline": "bench_pipeline", "fusion": "bench_fusion",
+                   "hybrid": "bench_hybrid"}
         wanted = {aliases.get(s, s) for s in args.section}
         known = {name for name, _ in sections}
         unknown = wanted - known
@@ -272,8 +339,9 @@ def main(argv=None) -> None:
         sections = [s for s in sections if s[0] in wanted]
     elif quick:
         keep = {"bench_compile", "bench_serve", "bench_pipeline",
-                "bench_fusion", "fig12_costmodel", "fig18_breakdown",
-                "fig24_topology", "validate_paper", "roofline_table"}
+                "bench_fusion", "bench_hybrid", "fig12_costmodel",
+                "fig18_breakdown", "fig24_topology", "validate_paper",
+                "roofline_table"}
         sections = [s for s in sections if s[0] in keep]
 
     failed = []

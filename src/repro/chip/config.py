@@ -138,10 +138,17 @@ class ChipConfig:
         tier for multi-class topologies)."""
         return self.topo.occupancy(exec_bytes, preload_bytes, dist_bytes)
 
-    def chip_view(self) -> ChipView:
+    def chip_view(self, width: int = 1) -> ChipView:
         """One member chip of this pod + the inter-chip tier a pipeline
-        stage boundary crosses (DESIGN.md §7)."""
-        return self.topo.chip_view()
+        stage boundary crosses (DESIGN.md §7).  ``width > 1`` tags the view
+        as one shard of a tensor-parallel stage spanning ``width`` member
+        chips (DESIGN.md §9)."""
+        return self.topo.chip_view(width)
+
+    def collective_time(self, kind: str, nbytes: float, width: int,
+                        link_class: str | None = None) -> float:
+        """Ring-collective time among ``width`` member chips (DESIGN.md §9)."""
+        return self.topo.collective_time(kind, nbytes, width, link_class)
 
     def scaled(self, **kw) -> "ChipConfig":
         return dataclasses.replace(self, **kw)

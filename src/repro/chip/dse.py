@@ -9,6 +9,10 @@ benchmark sections.
   of the pipeline-parallel pod planner: steady-state interval vs the
   replicated single-chip baseline, with a simulated interval on a layer
   truncation to validate the planner's estimate.
+* :func:`hybrid_sweep` (DESIGN.md §9) — topology x model sweep of the
+  joint (cut x width x replicas x microbatch) hybrid planner against the
+  pure pipeline it is never allowed to lose to, with a simulated interval
+  validating the hybrid plan (collectives + replica servers included).
 """
 
 from __future__ import annotations
@@ -132,5 +136,73 @@ def pipeline_sweep(cfg, *, num_chips_list: Sequence[int] = (1, 2, 4),
                 "sim_interval_ms": round(sim.interval * 1e3, 3),
                 "plan_sim_ratio": round(sim.interval / pps.interval, 3)
                 if pps.interval else "",
+            })
+    return rows
+
+
+def hybrid_sweep(models: Sequence[str] = ("opt_30b",), *,
+                 topologies: Sequence[str] = ("all2all", "mesh2d", "torus2d",
+                                              "ring", "hier_pod"),
+                 num_chips: int = 4, batch: int = 32, seq: int = 2048,
+                 design: str = "ELK-Full", max_orders: int = 4,
+                 sim_layers: int = 8,
+                 microbatches: Optional[int] = None,
+                 chip_factory: Callable[..., ChipConfig] = ipu_pod4_hbm,
+                 ) -> list[dict]:
+    """Topology x model sweep of the hybrid planner (DESIGN.md §9).
+
+    Each row pairs the pure-pipeline plan with the hybrid plan on the same
+    ``sim_layers`` truncation (exact stage plans, one memoized compile
+    context per (model, topology) shared across all widths and microbatch
+    candidates) and event-simulates the hybrid plan — replica servers and
+    intra-stage collectives included.  Two gates ride on the rows:
+    per-request hybrid time never above pipeline (the planner is
+    never-worse by construction, so a violation is a regression) and the
+    simulated steady interval within 2x of the planner's.
+    """
+    from repro.chip.simulator import simulate_pipeline
+    from repro.configs import get_config
+    from repro.core.pipeline_pod import plan_hybrid, plan_pipeline
+
+    rows = []
+    for model in models:
+        cfg = get_config(model)
+        sim_cfg = dataclasses.replace(cfg, num_layers=min(cfg.num_layers,
+                                                          sim_layers))
+        for topo in topologies:
+            pod = scale_pod(chip_factory(topology=topo), num_chips)
+            # hybrid first: it plans the pure pipeline internally through
+            # the shared context, so the explicit call below hits the cache
+            hyb = plan_hybrid(sim_cfg, pod, batch=batch, seq=seq,
+                              design=design, max_orders=max_orders,
+                              microbatches=microbatches)
+            pipe = plan_pipeline(sim_cfg, pod, batch=batch, seq=seq,
+                                 design=design, max_orders=max_orders)
+            sim = simulate_pipeline(hyb, pod)
+            pipe_req = pipe.batch_interval / max(pipe.batch, 1)
+            hyb_req = hyb.batch_interval / max(hyb.batch, 1)
+            rows.append({
+                "model": cfg.name, "topology": topo, "num_chips": num_chips,
+                "pipe_interval_ms": round(pipe.interval * 1e3, 3),
+                "pipe_batch_interval_ms": round(pipe.batch_interval * 1e3,
+                                                3),
+                "pipe_req_us": round(pipe_req * 1e6, 3),
+                "hybrid_interval_ms": round(hyb.interval * 1e3, 3),
+                "hybrid_batch_interval_ms": round(hyb.batch_interval * 1e3,
+                                                  3),
+                "hybrid_req_us": round(hyb_req * 1e6, 3),
+                "hybrid_speedup": round(pipe_req / hyb_req, 3)
+                if hyb_req else "",
+                "hybrid_won": int(hyb_req < pipe_req),
+                "stages": hyb.num_stages,
+                "microbatch": hyb.microbatch,
+                "microbatches": hyb.microbatches,
+                "cuts": "/".join(str(st.layers[1]) for st in hyb.stages),
+                "widths": "/".join(str(st.width) for st in hyb.stages),
+                "replicas": "/".join(str(st.replicas) for st in hyb.stages),
+                "sim_layers": sim_cfg.num_layers,
+                "sim_interval_ms": round(sim.interval * 1e3, 3),
+                "plan_sim_ratio": round(sim.interval / hyb.interval, 3)
+                if hyb.interval else "",
             })
     return rows

@@ -366,6 +366,16 @@ def simulate_pipeline(pplan: "PipelinePlan", chip: ChipConfig,
 
     Stage plans must be exact (non-extrapolated): truncate the model before
     planning when simulating deep stacks, as the DSE sweeps do.
+
+    Hybrid stages (DESIGN.md §9): a stage with tensor-parallel ``width``
+    re-prices its intra-stage collectives from the plan's ``(kind, bytes)``
+    descriptors through ``chip.topo.collective_time`` — the simulator's own
+    view of the link tiers, not the planner's number — and serializes them
+    at the end of each microbatch's service (ring steps synchronize every
+    member chip, so they cannot overlap the next microbatch's compute).  A
+    stage with ``replicas`` copies round-robins its microbatch stream over
+    that many servers.  Width-1, replica-1 stages are bit-identical to the
+    pure-pipeline composition.
     """
     view = chip.chip_view()
     M = microbatches if microbatches is not None else pplan.microbatches
@@ -377,35 +387,56 @@ def simulate_pipeline(pplan: "PipelinePlan", chip: ChipConfig,
                 "truncation of the model for simulation (stage "
                 f"{st.index} extrapolated from "
                 f"{st.plan.extrapolated_from_layers} layers)")
-    # a one-stage plan was compiled against the whole pod (degenerate
-    # single-chip path); multi-stage plans against the member chip view
-    member = chip if len(pplan.stages) == 1 else view.chip
+    # a one-stage single-chip plan was compiled against the whole pod
+    # (degenerate path); everything else against the member chip view
+    one = len(pplan.stages) == 1 and pplan.stages[0].chips == 1
+    member = chip if one else view.chip
+    # replicated stages bunch completions within one round, so their steady
+    # cadence only shows over a second decode round (gated on the real
+    # token dependency: a group re-enters stage 0 after its previous round
+    # left the last stage).  Pure-pipeline plans keep the one-round path.
+    cycles = 2 if any(st.replicas > 1 for st in pplan.stages) else 1
+    Mt = M * cycles
     # per-stage microbatch completion times under intra-chip contention
     ends = []
     for st in pplan.stages:
         n = len(st.plan.graph.ops)
-        res = simulate(_tile_plan(st.plan, M), member)
-        ends.append([res.op_exec_end[(c + 1) * n - 1] for c in range(M)])
+        res = simulate(_tile_plan(st.plan, Mt), member)
+        ends.append([res.op_exec_end[(c + 1) * n - 1] for c in range(Mt)])
+    # intra-stage collective time per microbatch, re-priced by the pod topo
+    colls = [sum(chip.topo.collective_time(kind, b, st.width)
+                 for kind, b in st.collectives) if st.width > 1 else 0.0
+             for st in pplan.stages]
     # compose stages: microbatch m enters stage s after its predecessor on
     # the same stage finishes and after its own activation arrives over the
     # boundary (sends on one boundary are serialized in microbatch order)
     S = len(pplan.stages)
-    t = [[0.0] * M for _ in range(S)]
+    t = [[0.0] * Mt for _ in range(S)]
     for s in range(S):
         durs = [ends[s][0]] + [ends[s][c] - ends[s][c - 1]
-                               for c in range(1, M)]
+                               for c in range(1, Mt)]
+        r = max(pplan.stages[s].replicas, 1)
+        free = [0.0] * r               # r data-parallel servers round-robin
         send_prev_end = 0.0
-        for m in range(M):
+        for m in range(Mt):
             if s == 0:
-                arrive = 0.0
+                # round 2 of a group waits for its round-1 sampled token
+                arrive = t[S - 1][m - M] if m >= M else 0.0
             else:
                 start = max(t[s - 1][m], send_prev_end)
                 send_prev_end = start + pplan.stages[s - 1].send_time
                 arrive = send_prev_end
             prev = t[s][m - 1] if m else 0.0
-            t[s][m] = max(arrive, prev) + durs[m]
+            done = max(arrive, free[m % r]) + durs[m] + colls[s]
+            # keep handoffs in microbatch order for the next boundary
+            free[m % r] = t[s][m] = max(done, prev)
     out = t[S - 1]
-    interval = ((out[M - 1] - out[0]) / (M - 1)) if M > 1 else out[0]
-    stage_ivals = [((e[M - 1] - e[0]) / (M - 1)) if M > 1 else e[0]
-                   for e in ends]
-    return PipelineSimResult(out[M - 1], interval, out[0], stage_ivals, out)
+    if cycles > 1:
+        # steady per-microbatch cadence across the second round
+        interval = (out[Mt - 1] - out[M - 1]) / M
+        stage_ivals = [(e[Mt - 1] - e[M - 1]) / M for e in ends]
+    else:
+        interval = ((out[M - 1] - out[0]) / (M - 1)) if M > 1 else out[0]
+        stage_ivals = [((e[M - 1] - e[0]) / (M - 1)) if M > 1 else e[0]
+                       for e in ends]
+    return PipelineSimResult(out[Mt - 1], interval, out[0], stage_ivals, out)

@@ -40,6 +40,12 @@ if TYPE_CHECKING:  # avoid a circular import; chip/config.py imports us
 
 TRAFFIC_CLASSES = ("preload", "dist", "rot")
 
+# collective shapes the hybrid pod planner prices (DESIGN.md §9): ring
+# algorithms over the member chips of a pod, on the tier a chip-to-chip
+# transfer crosses
+COLLECTIVE_KINDS = ("all_reduce", "reduce_scatter", "all_gather",
+                    "all_to_all")
+
 
 @dataclasses.dataclass(frozen=True)
 class LinkClass:
@@ -65,6 +71,12 @@ class ChipView:
     num_chips: int
     inter_bw: float
     inter_latency: float
+    #: tensor-parallel width of the stage this view serves.  The member chip
+    #: itself is unchanged (per-chip HBM bandwidth and SRAM are physical);
+    #: the byte division lives in the sharded graph the planner compiles
+    #: against this view (``pipeline_pod.shard_graph``, DESIGN.md §9), and
+    #: the intra-stage collective term is priced by ``collective_time``.
+    width: int = 1
 
 
 def near_square_grid(n: int) -> tuple[int, int]:
@@ -188,8 +200,8 @@ class TopologyModel:
                         + dist_bytes * dw) * inv)
         return t
 
-    def chip_view(self) -> ChipView:
-        """Project the pod onto one member chip (DESIGN.md §7).
+    def chip_view(self, width: int = 1) -> ChipView:
+        """Project the pod onto one member chip (DESIGN.md §7, §9).
 
         The member ``ChipConfig`` keeps this chip's share of every per-chip
         resource (cores, SRAM, HBM bandwidth and controllers) with
@@ -199,7 +211,14 @@ class TopologyModel:
         tier) attribute a bisection share per chip-pair boundary; a
         single-chip config projects to itself with the full on-chip
         bisection as the (never-crossed) boundary bandwidth.
+
+        ``width > 1`` marks the view as serving one shard of a stage that
+        spans ``width`` member chips: the per-chip resources are unchanged,
+        the weight/KV byte division is applied by the sharded stage graph
+        compiled against this view, and the intra-stage collective term is
+        priced separately via :meth:`collective_time`.
         """
+        self._check_width(width)
         chip = self._chip
         n = self.num_chips
         if n <= 1:
@@ -210,7 +229,55 @@ class TopologyModel:
             hbm_bw=chip.hbm_bw / n,
             hbm_controllers=max(chip.hbm_controllers // n, 1))
         return ChipView(member, n, self.bisection_bw / max(n - 1, 1),
-                        2 * chip.link_latency)
+                        2 * chip.link_latency, width)
+
+    def _check_width(self, width: int) -> None:
+        if not 1 <= width <= max(self.num_chips, 1):
+            raise ValueError(
+                f"width {width} out of range for a {self.num_chips}-chip "
+                f"{self.kind} pod (need 1 <= width <= num_chips)")
+
+    # -- collective cost API (hybrid pod planner, DESIGN.md §9) --------------
+    def _collective_boundary(self, link_class: str | None) -> tuple:
+        """(bandwidth, per-step latency) of one chip-pair boundary on the
+        tier a ring collective's steps cross.  Matches ``chip_view()``'s
+        inter-tier numbers exactly so the planner's send and collective
+        terms price the same physical links."""
+        names = [lc.name for lc in self.classes]
+        if link_class is None:
+            link_class = "inter" if "inter" in names else names[0]
+        if link_class not in names:
+            raise ValueError(
+                f"unknown link class {link_class!r} on {self.kind}; "
+                f"known: {names}")
+        # flat pools: every tier is the on-chip pool; a chip-pair boundary
+        # sustains a bisection share, two hop latencies per step
+        return (self.bisection_bw / max(self.num_chips - 1, 1),
+                2 * self.link_latency)
+
+    def collective_time(self, kind: str, nbytes: float, width: int,
+                        link_class: str | None = None) -> float:
+        """Ring-algorithm time (s) of one collective among ``width`` member
+        chips, each contributing/holding ``nbytes`` of payload.
+
+        Shapes (``COLLECTIVE_KINDS``): reduce-scatter and all-gather each
+        move ``(width-1)/width * nbytes`` through one chip-pair boundary in
+        ``width-1`` latency-bearing steps; all-reduce composes the two
+        (RS + AG, the standard ring decomposition); all-to-all keeps
+        ``1/width`` of the payload local and rings the rest, which costs
+        the same single pass.  Degenerate cases (``width <= 1`` or zero
+        bytes) are free so pure-pipeline plans are untouched.
+        """
+        if kind not in COLLECTIVE_KINDS:
+            raise ValueError(f"unknown collective kind {kind!r}; known: "
+                             f"{COLLECTIVE_KINDS}")
+        self._check_width(max(width, 1))
+        if width <= 1 or nbytes <= 0:
+            return 0.0
+        bw, lat = self._collective_boundary(link_class)
+        steps = width - 1
+        single_pass = (nbytes * steps / width) / bw + steps * lat
+        return 2.0 * single_pass if kind == "all_reduce" else single_pass
 
     def signature(self) -> tuple:
         """Hashable identity for compile-pipeline cache keys (memoized)."""
@@ -367,7 +434,8 @@ class HierPodTopology(TopologyModel):
             return by["intra"]
         return by["intra"] + by["inter"]
 
-    def chip_view(self) -> ChipView:
+    def chip_view(self, width: int = 1) -> ChipView:
+        self._check_width(width)
         chip = self._chip
         n = self.num_chips
         if n <= 1:
@@ -384,7 +452,27 @@ class HierPodTopology(TopologyModel):
         return ChipView(member, n,
                         chip.inter_links_per_chip * chip.link_bw
                         * chip.inter_bw_ratio,
-                        by["intra"] + by["inter"])
+                        by["intra"] + by["inter"], width)
+
+    def _collective_boundary(self, link_class: str | None) -> tuple:
+        # cross-chip collectives ride the gateway tier: one boundary = the
+        # sending chip's gateway links, per-step latency = intra hop to the
+        # gateway + one (slower) inter-chip hop — the same numbers
+        # chip_view() exposes for stage-to-stage sends
+        names = [lc.name for lc in self.classes]
+        if link_class is None:
+            link_class = "inter" if self.num_chips > 1 else "intra"
+        if link_class not in names:
+            raise ValueError(
+                f"unknown link class {link_class!r} on {self.kind}; "
+                f"known: {names}")
+        if link_class == "inter" and self.num_chips > 1:
+            chip = self._chip
+            by = {lc.name: lc.hop_latency for lc in self.classes}
+            return (chip.inter_links_per_chip * chip.link_bw
+                    * chip.inter_bw_ratio,
+                    by["intra"] + by["inter"])
+        return super()._collective_boundary("intra")
 
     def _signature(self) -> tuple:
         return super()._signature() + (self.frac_dist_inter,

@@ -93,6 +93,12 @@ class AnalyticCostModel:
             return 0.0
         return volume / c.hbm_bw + c.hbm_latency
 
+    def collective_time(self, kind: str, nbytes: float, width: int,
+                        link_class: str | None = None) -> float:
+        """Ring-collective time among ``width`` chips of the pod this chip
+        belongs to (hybrid pod planner, DESIGN.md §9)."""
+        return self.chip.topo.collective_time(kind, nbytes, width, link_class)
+
 
 # ---------------------------------------------------------------------------
 # Linear-tree regressor (paper ref [10], re-implemented minimally)

@@ -52,6 +52,10 @@ class PodKnobs:
     microbatches: int = 1            # concurrent microbatch groups
     interval_s: float = 0.0          # steady per-microbatch interval
     batch_interval_s: float = 0.0    # one decode round of the whole batch
+    # hybrid mode (DESIGN.md §9): per-stage tensor-parallel width and
+    # data-parallel replica count (all 1s for the pure pipeline)
+    stage_widths: tuple = ()
+    stage_replicas: tuple = ()
 
 
 def _plan_knobs(plan: ExecutionPlan, chip: ChipConfig) -> tuple[int, float]:
@@ -81,7 +85,9 @@ def pod_plan(cfg: ModelConfig, *, batch: int, seq: int,
              phase: Phase = "decode", num_chips: int = 256,
              design: str = "ELK-Full", chip: Optional[ChipConfig] = None,
              mode: str = "flat",
-             num_stages: Optional[int] = None) -> PodKnobs:
+             num_stages: Optional[int] = None,
+             widths: Optional[tuple] = None,
+             replicas: Optional[tuple] = None) -> PodKnobs:
     """Run the faithful ELK compiler against the pod model and translate
     its decisions to runtime knobs.
 
@@ -90,22 +96,29 @@ def pod_plan(cfg: ModelConfig, *, batch: int, seq: int,
     pipeline stages across the pod's chips (``core.pipeline_pod``) and
     additionally returns the stage boundaries, microbatch knobs and the
     steady-state interval the serving stack sizes admission from.
+    ``mode="hybrid"`` runs the joint (cut x width x replicas x microbatch)
+    search (DESIGN.md §9); never worse than ``"pipeline"``, bit-identical
+    to it when ``widths``/``replicas`` are pinned to ``(1,)``.
 
     Repeat calls for the same (model, shape, design) hit the process-level
     plan caches (DESIGN.md §2, §7), so the serving/training stacks can ask
     for knobs on the request path without recompiling.
     """
-    if mode not in ("flat", "pipeline"):
+    if mode not in ("flat", "pipeline", "hybrid"):
         raise ValueError(f"unknown pod_plan mode {mode!r}")
-    if mode == "pipeline":
-        from repro.core.pipeline_pod import plan_pipeline
+    if mode in ("pipeline", "hybrid"):
+        from repro.core.pipeline_pod import plan_hybrid, plan_pipeline
         chip = chip or tpu_v5e_pod_hier(num_chips)
-        pp = plan_pipeline(cfg, chip, batch=batch, seq=seq, phase=phase,
-                           design=design, num_stages=num_stages)
+        if mode == "hybrid":
+            pp = plan_hybrid(cfg, chip, batch=batch, seq=seq, phase=phase,
+                             design=design, widths=widths, replicas=replicas)
+        else:
+            pp = plan_pipeline(cfg, chip, batch=batch, seq=seq, phase=phase,
+                               design=design, num_stages=num_stages)
         # knobs from the bottleneck stage: its plan paces the pipeline
-        bottleneck = max(pp.stages,
-                         key=lambda st: st.interval + st.send_time)
-        member = chip.chip_view().chip if pp.num_stages > 1 else chip
+        bottleneck = max(pp.stages, key=lambda st: st.effective_interval)
+        flat = pp.num_stages == 1 and pp.stages[0].chips == 1
+        member = chip if flat else chip.chip_view().chip
         depth, f = _plan_knobs(bottleneck.plan, member)
         return PodKnobs(prefetch_depth=depth, resident_fraction=f,
                         fsdp=f < 0.999, design=design,
@@ -115,7 +128,10 @@ def pod_plan(cfg: ModelConfig, *, batch: int, seq: int,
                         microbatch=pp.microbatch,
                         microbatches=pp.microbatches,
                         interval_s=pp.interval,
-                        batch_interval_s=pp.batch_interval)
+                        batch_interval_s=pp.batch_interval,
+                        stage_widths=tuple(st.width for st in pp.stages),
+                        stage_replicas=tuple(st.replicas
+                                             for st in pp.stages))
     chip = chip or tpu_v5e_pod(num_chips)
     plan = compile_model(cfg, chip, batch=batch, seq=seq, phase=phase,
                          design=design, max_orders=8)

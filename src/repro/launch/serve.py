@@ -70,8 +70,10 @@ def main() -> None:
     ap.add_argument("--prefetch-depth", type=int, default=0,
                     help="0 = ask the ELK scheduler (core.integration)")
     ap.add_argument("--pipeline-pod", type=int, default=0, metavar="GROUPS",
-                    help="plan the pod as pipeline stages across GROUPS "
-                         "chip islands (DESIGN.md §7) and size admission "
+                    help="plan the pod across GROUPS chip islands with the "
+                         "joint hybrid search (cuts x tensor width x "
+                         "replicas x microbatch, DESIGN.md §9; never worse "
+                         "than pure pipeline stages) and size admission "
                          "from the steady-state interval (0 = flat pod)")
     ap.add_argument("--production-mesh", action="store_true")
     ap.add_argument("--trace", type=int, default=0, metavar="N",

@@ -78,22 +78,25 @@ def elk_serve_config(cfg: ModelConfig, *, batch: int, cache_capacity: int,
 
       Single-chip plans size it to the gather-ahead window (16 tokens of
       chunk compute per preloaded block keeps the chunk hidden behind the
-      window's ICI traffic).  With ``pipeline=True`` the pod is planned as
-      pipeline stages (DESIGN.md §7) and admission is sized from the
-      **steady-state interval** instead: the whole running batch decodes
-      once per ``batch_interval``, so one interval hides up to
-      ``microbatch * num_stages`` prompt tokens of prefill — that is the
-      per-tick admission budget.  Both are clamped to the cache capacity
-      so one chunk never wraps a request's own ring.
+      window's ICI traffic).  With ``pipeline=True`` the pod is planned
+      with the **hybrid** search (joint cut x width x replicas x
+      microbatch, DESIGN.md §9 — never worse than pure pipeline stages)
+      and admission is sized from the **steady-state interval** instead:
+      the whole running batch decodes once per ``batch_interval``, so one
+      interval hides up to ``microbatch * microbatches`` prompt tokens of
+      prefill — that is the per-tick admission budget (for a pure
+      pipeline plan ``microbatches == num_stages``, so this is the same
+      budget as before the hybrid search existed).  Both are clamped to
+      the cache capacity so one chunk never wraps a request's own ring.
     """
     from repro.core.integration import pod_plan
 
     knobs = pod_plan(cfg, batch=batch, seq=cache_capacity, phase="decode",
                      num_chips=num_chips, design=design,
-                     mode="pipeline" if pipeline else "flat", chip=pod)
+                     mode="hybrid" if pipeline else "flat", chip=pod)
     depth = max(knobs.prefetch_depth, 1)
-    if pipeline and knobs.num_stages > 1:
-        per_interval = max(knobs.microbatch * knobs.num_stages, 16)
+    if pipeline and knobs.microbatch > 0:
+        per_interval = max(knobs.microbatch * max(knobs.microbatches, 1), 16)
         chunk = min(per_interval, 128, cache_capacity)
     else:
         chunk = min(max(16, min(16 * depth, 128)), cache_capacity)

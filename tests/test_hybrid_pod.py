@@ -1,0 +1,243 @@
+"""Hybrid parallelism planner tests (DESIGN.md §9).
+
+Covers the issue's acceptance criteria and satellites:
+
+* degenerate equivalence — hybrid pinned to ``widths=(1,)`` /
+  ``replicas=(1,)`` is bit-identical to ``mode="pipeline"``
+  (property-tested over shapes), and a one-chip pod degenerates to the
+  flat single-chip compile;
+* ``shard_graph`` conservation — per-chip FLOPs and HBM bytes divide by
+  the tensor-parallel width (up to ceil rounding), dense models pay only
+  all-reduces, MoE models an expert-dispatch all-to-all pair;
+* never-worse — the joint search never returns a plan with a worse
+  per-request round time than the pure pipeline it always evaluates;
+* acceptance pin — hybrid beats pure pipeline on full opt_30b decode on
+  the 4-chip ``hier_pod`` (the PR 4 pipeline pin stays reproduced);
+* simulator agreement — ``simulate_pipeline`` prices replica servers and
+  intra-stage collectives and stays within 2x of the hybrid planner on
+  every shipped topology;
+* cache keys — tensor-parallel width is part of the plan/stage cache
+  signatures, so different widths can never alias.
+"""
+
+import dataclasses
+
+import pytest
+
+from repro.chip.config import ipu_pod4_hbm
+from repro.chip.simulator import simulate_pipeline
+from repro.chip.topology import TOPOLOGIES
+from repro.configs import get_config
+from repro.core.elk import compile_model
+from repro.core.graph import build_graph
+from repro.core.integration import pod_plan
+from repro.core.pipeline_pod import plan_hybrid, plan_pipeline, shard_graph
+
+POD = ipu_pod4_hbm(topology="hier_pod")
+
+
+def tiny_cfg(num_layers: int = 4, **kw):
+    return dataclasses.replace(get_config("opt_30b"),
+                               num_layers=num_layers, **kw)
+
+
+def plans_equal(a, b) -> bool:
+    """Bit-identical schedules: same timings, same per-op plan choices."""
+    if a.total_time != b.total_time or a.preload_order != b.preload_order:
+        return False
+    for da, db in zip(a.decisions, b.decisions):
+        if da.exec_plan.key() != db.exec_plan.key():
+            return False
+        fa = da.preload_plan.frac if da.preload_plan else None
+        fb = db.preload_plan.frac if db.preload_plan else None
+        if fa != fb:
+            return False
+    return True
+
+
+# ---------------------------------------------------------------------------
+# degenerate equivalence (satellite, property-tested)
+# ---------------------------------------------------------------------------
+
+class TestDegenerateEquivalence:
+    @pytest.mark.parametrize("num_layers,batch,seq", [
+        (2, 8, 256), (4, 8, 256), (4, 32, 512), (8, 16, 256)])
+    def test_width1_replica1_is_pure_pipeline(self, num_layers, batch, seq):
+        cfg = tiny_cfg(num_layers)
+        hp = plan_hybrid(cfg, POD, batch=batch, seq=seq, max_orders=2,
+                         widths=(1,), replicas=(1,))
+        pp = plan_pipeline(cfg, POD, batch=batch, seq=seq, max_orders=2)
+        assert hp.num_stages == pp.num_stages
+        assert hp.microbatch == pp.microbatch
+        assert hp.microbatches == pp.microbatches
+        assert hp.interval == pp.interval
+        assert hp.batch_interval == pp.batch_interval
+        assert hp.fill_time == pp.fill_time
+        for a, b in zip(hp.stages, pp.stages):
+            assert a.layers == b.layers
+            assert a.width == 1 and a.replicas == 1
+            assert a.collective_time == 0.0 and a.collectives == ()
+            assert plans_equal(a.plan, b.plan)
+
+    def test_single_chip_pod_is_flat_compile(self):
+        cfg = tiny_cfg()
+        pod1 = dataclasses.replace(
+            POD, num_chips=1, num_cores=POD.cores_per_chip,
+            hbm_bw=POD.hbm_bw / 4, hbm_controllers=4)
+        hp = plan_hybrid(cfg, pod1, batch=8, seq=256)
+        ref = compile_model(cfg, pod1, batch=8, seq=256, phase="decode",
+                            design="ELK-Full", max_orders=4)
+        assert hp.num_stages == 1 and hp.microbatches == 1
+        assert hp.stages[0].width == 1 and hp.stages[0].replicas == 1
+        assert plans_equal(hp.stages[0].plan, ref)
+        assert hp.interval == ref.total_time
+
+    def test_sim_identical_for_degenerate_plan(self):
+        """simulate_pipeline's replica/collective terms are exact no-ops
+        on a width-1/replica-1 plan."""
+        cfg = tiny_cfg(4)
+        hp = plan_hybrid(cfg, POD, batch=8, seq=256, max_orders=2,
+                         widths=(1,), replicas=(1,))
+        pp = plan_pipeline(cfg, POD, batch=8, seq=256, max_orders=2)
+        sh, sp = simulate_pipeline(hp, POD), simulate_pipeline(pp, POD)
+        assert sh.interval == sp.interval
+        assert sh.total_time == sp.total_time
+
+
+# ---------------------------------------------------------------------------
+# shard_graph: conservation + collective shapes
+# ---------------------------------------------------------------------------
+
+class TestShardGraph:
+    def test_dense_conservation_and_all_reduce_only(self):
+        g = build_graph(tiny_cfg(2), batch=8, seq=256, phase="decode")
+        lo, l0_end = g.layer_span            # [start, end) of layer 0
+        hi = lo + g.num_layers * (l0_end - lo)
+        flops0 = sum(op.flops for op in g.ops[lo:hi])
+        hbm0 = sum(op.hbm_bytes for op in g.ops[lo:hi])
+        for w in (2, 4):
+            sg, colls = shard_graph(g, w)
+            flops = sum(op.flops for op in sg.ops[lo:hi])
+            hbm = sum(op.hbm_bytes for op in sg.ops[lo:hi])
+            # per-chip layer work = 1/w of the whole, up to ceil rounding
+            # and the replicated in-layer norms/router
+            assert flops0 / w <= flops <= 1.15 * flops0 / w
+            assert hbm0 / w <= hbm <= 1.15 * hbm0 / w
+            # the prefix/suffix (embed, final norm, lm_head) is replicated
+            for a, b in zip(g.ops[:lo] + g.ops[hi:],
+                            sg.ops[:lo] + sg.ops[hi:]):
+                assert a.flops == b.flops and a.hbm_bytes == b.hbm_bytes
+            assert colls, "row-sharded projections must pay an all-reduce"
+            assert {k for k, _ in colls} == {"all_reduce"}
+            assert all(b > 0 for _, b in colls)
+            assert sg.model.endswith(f"@tp{w}")
+
+    def test_moe_gets_expert_all_to_all(self):
+        cfg = dataclasses.replace(get_config("kimi_k2_1t_a32b"),
+                                  num_layers=2)
+        g = build_graph(cfg, batch=8, seq=256, phase="decode")
+        sg, colls = shard_graph(g, 4)
+        kinds = {k for k, _ in colls}
+        # expert-parallel dispatch/combine + the dense projections' AR
+        assert "all_to_all" in kinds and "all_reduce" in kinds
+        # expert weights shard across the width: strictly less HBM traffic
+        assert sum(op.hbm_bytes for op in sg.ops) < \
+            sum(op.hbm_bytes for op in g.ops)
+
+    def test_width_is_part_of_graph_identity(self):
+        """Cache-key regression: a sharded graph can never alias the full
+        graph or another width in the plan cache (its signature starts
+        from the model name)."""
+        g = build_graph(tiny_cfg(2), batch=8, seq=256, phase="decode")
+        names = {g.model, shard_graph(g, 2)[0].model,
+                 shard_graph(g, 4)[0].model}
+        assert len(names) == 3
+
+
+# ---------------------------------------------------------------------------
+# never-worse + the acceptance pin
+# ---------------------------------------------------------------------------
+
+class TestHybridSearch:
+    @pytest.mark.parametrize("topo", ("hier_pod", "ring"))
+    def test_never_worse_than_pipeline(self, topo):
+        cfg = tiny_cfg(4)
+        pod = ipu_pod4_hbm(topology=topo)
+        pp = plan_pipeline(cfg, pod, batch=8, seq=256, max_orders=2)
+        hp = plan_hybrid(cfg, pod, batch=8, seq=256, max_orders=2)
+        assert hp.batch_interval / hp.batch <= \
+            pp.batch_interval / pp.batch * (1 + 1e-12)
+
+    def test_hybrid_beats_pipeline_opt30b_4chip(self):
+        """Acceptance: on full opt_30b decode over the 4-chip hier_pod,
+        the joint search finds a strictly better per-request round time
+        than the pure pipeline — and the PR 4 pipeline pin still holds."""
+        cfg = get_config("opt_30b")
+        pp = plan_pipeline(cfg, POD, batch=32, seq=2048)
+        hp = plan_hybrid(cfg, POD, batch=32, seq=2048)
+        assert pp.batch_interval == pytest.approx(20.55e-3, rel=1e-3)
+        assert hp.batch_interval == pytest.approx(14.85e-3, rel=1e-2)
+        assert hp.batch_interval / hp.batch < pp.batch_interval / pp.batch
+        assert any(st.width > 1 or st.replicas > 1 for st in hp.stages)
+        # the chips the plan claims exist: widths x replicas fill the pod
+        assert sum(st.chips for st in hp.stages) == POD.num_chips
+
+    def test_pinned_microbatches_respected(self):
+        cfg = tiny_cfg(8)
+        hp = plan_hybrid(cfg, POD, batch=32, seq=512, max_orders=2,
+                         microbatches=2)
+        assert hp.microbatches <= 2
+        assert hp.microbatch * hp.microbatches >= 32
+
+
+# ---------------------------------------------------------------------------
+# simulator agreement (acceptance: within 2x on every shipped topology)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("topo", sorted(TOPOLOGIES))
+def test_hybrid_sim_within_2x(topo):
+    cfg = tiny_cfg(8)
+    pod = ipu_pod4_hbm(topology=topo)
+    hp = plan_hybrid(cfg, pod, batch=32, seq=2048)
+    sim = simulate_pipeline(hp, pod)
+    ratio = sim.interval / hp.interval
+    assert 0.5 <= ratio <= 2.0, (topo, ratio)
+
+
+# ---------------------------------------------------------------------------
+# pod_plan mode="hybrid" knobs
+# ---------------------------------------------------------------------------
+
+class TestPodPlanHybrid:
+    def test_hybrid_mode_returns_width_knobs(self):
+        cfg = tiny_cfg(8)
+        k = pod_plan(cfg, batch=32, seq=2048, chip=POD, mode="hybrid")
+        assert len(k.stage_widths) == k.num_stages
+        assert len(k.stage_replicas) == k.num_stages
+        assert sum(w * r for w, r in zip(k.stage_widths,
+                                         k.stage_replicas)) == POD.num_chips
+        assert k.microbatch * k.microbatches >= 32
+        assert k.interval_s > 0
+        assert k.batch_interval_s == pytest.approx(
+            k.microbatches * k.interval_s)
+
+    def test_pipeline_mode_stays_width1(self):
+        cfg = tiny_cfg(8)
+        k = pod_plan(cfg, batch=32, seq=2048, chip=POD, mode="pipeline")
+        assert set(k.stage_widths) == {1}
+        assert set(k.stage_replicas) == {1}
+
+
+# ---------------------------------------------------------------------------
+# cache keys (satellite: width pinned in plan cache signatures)
+# ---------------------------------------------------------------------------
+
+class TestCacheKeys:
+    def test_width_axis_in_plan_cache_key(self):
+        cfg = tiny_cfg(4)
+        kw = dict(batch=8, seq=256, max_orders=2)
+        a = plan_hybrid(cfg, POD, widths=(1,), replicas=(1,), **kw)
+        b = plan_hybrid(cfg, POD, widths=(1, 2), replicas=(1,), **kw)
+        c = plan_hybrid(cfg, POD, widths=(1,), replicas=(1,), **kw)
+        assert a is c, "same search space must hit the plan cache"
+        assert a is not b, "different width axes must not alias"

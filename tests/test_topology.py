@@ -262,3 +262,63 @@ class TestTopologyCaching:
         assert lat["all2all"] <= lat["torus2d"] <= lat["mesh2d"] \
             <= lat["ring"]
         assert len({round(v, 12) for v in lat.values()}) >= 3
+
+
+# ---------------------------------------------------------------------------
+# collective cost API (hybrid pod planner, DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+class TestCollectiveCosts:
+    BYTES = 8 << 20
+
+    @pytest.mark.parametrize("topo", ALL_TOPOLOGIES)
+    def test_all_reduce_composes_rs_plus_ag(self, topo):
+        """Ring all-reduce = reduce-scatter then all-gather, exactly; any
+        drift means the two code paths stopped pricing the same links."""
+        t = chip_for(topo).topo
+        ar = t.collective_time("all_reduce", self.BYTES, 4)
+        rs = t.collective_time("reduce_scatter", self.BYTES, 4)
+        ag = t.collective_time("all_gather", self.BYTES, 4)
+        assert ar >= rs + ag - 1e-15          # composition lower bound
+        assert ar == pytest.approx(rs + ag)
+
+    @pytest.mark.parametrize("topo", ALL_TOPOLOGIES)
+    @pytest.mark.parametrize("kind", ("all_reduce", "reduce_scatter",
+                                      "all_gather", "all_to_all"))
+    def test_monotone_in_bytes_and_width(self, topo, kind):
+        t = chip_for(topo).topo
+        assert t.collective_time(kind, 2 * self.BYTES, 4) > \
+            t.collective_time(kind, self.BYTES, 4)
+        assert t.collective_time(kind, self.BYTES, 4) > \
+            t.collective_time(kind, self.BYTES, 2)
+        assert t.collective_time(kind, self.BYTES, 1) == 0.0
+        assert t.collective_time(kind, 0, 4) == 0.0
+
+    def test_topology_ordering_fixed_bytes(self):
+        """Lower bisection per chip pair => slower collective: ring >=
+        torus2d >= all2all at fixed payload and width."""
+        times = {topo: chip_for(topo).topo.collective_time(
+            "all_reduce", self.BYTES, 4)
+            for topo in ("all2all", "torus2d", "ring")}
+        assert times["ring"] >= times["torus2d"] >= times["all2all"]
+
+    def test_hier_pod_boundary_matches_chip_view(self):
+        """The collective's chip-pair boundary prices the same gateway
+        links chip_view() exposes for stage-to-stage sends."""
+        chip = chip_for("hier_pod")
+        view = chip.chip_view()
+        one_pass = chip.topo.collective_time("all_gather", self.BYTES, 2)
+        expect = (self.BYTES / 2) / view.inter_bw + view.inter_latency
+        assert one_pass == pytest.approx(expect)
+
+    def test_rejects_unknown_kind_width_and_class(self):
+        chip = chip_for("all2all")
+        with pytest.raises(ValueError, match="collective kind"):
+            chip.topo.collective_time("broadcast", 1024, 2)
+        with pytest.raises(ValueError, match="out of range"):
+            chip.topo.collective_time("all_reduce", 1024, 99)
+        with pytest.raises(ValueError, match="link class"):
+            chip.topo.collective_time("all_reduce", 1024, 2,
+                                      link_class="nope")
+        with pytest.raises(ValueError, match="out of range"):
+            chip.chip_view(99)
