@@ -285,6 +285,84 @@ def bench_hybrid(quick: bool = False) -> None:
         raise RuntimeError("; ".join(bad))
 
 
+def bench_memtier(quick: bool = False) -> None:
+    """Tiered-memory DSE sweep (DESIGN.md §10) -> BENCH_memtier.json +
+    fig_memtier.csv.
+
+    Gates three contracts, CI-enforced by the ``memtier-smoke`` job:
+
+    * two-tier bit-identity — an explicitly passed two-tier ``mem_tiers``
+      spec plans exactly like the default scalar-field chip;
+    * never-worse + strict improvement — no swept stacked-DRAM point may
+      plan slower than the base pod, and at least one must plan strictly
+      faster (the acceptance design point: 8GB @ 16TB/s);
+    * simulator agreement — ``simulate_pipeline`` within 2x of the
+      planner's steady interval on the base row and every improved row.
+    """
+    import dataclasses
+
+    from benchmarks.common import emit
+    from repro.chip.config import ipu_pod4_hbm
+    from repro.chip.dse import tier_sweep
+    from repro.configs import get_config
+    from repro.core.elk import compile_model
+
+    bad = []
+
+    # -- gate 1: explicit two-tier spec is bit-identical to the default --
+    chip = ipu_pod4_hbm()
+    explicit = chip.scaled(mem_tiers=chip.mem_tiers)
+    cfg = dataclasses.replace(get_config("opt_30b"), num_layers=2)
+    kw = dict(batch=4, seq=2048, phase="decode", design="ELK-Full",
+              max_orders=2, cache=False)
+    a = compile_model(cfg, chip, **kw)
+    b = compile_model(cfg, explicit, **kw)
+    identical = (
+        a.total_time == b.total_time
+        and a.preload_order == b.preload_order
+        and all(da.exec_plan.key() == db.exec_plan.key()
+                and da.src_tier == db.src_tier
+                for da, db in zip(a.decisions, b.decisions)))
+    print(f"  two-tier bit-identity: {'OK' if identical else 'BROKEN'} "
+          f"(plan={a.total_time * 1e3:.4f}ms)")
+    if not identical:
+        bad.append("explicit two-tier mem_tiers spec no longer plans "
+                   "bit-identically to the default chip")
+
+    # -- gates 2+3: the stacked-DRAM sweep ------------------------------
+    sizes = (8.0,) if quick else (4.0, 8.0, 16.0)
+    bws = (2.0, 16.0) if quick else (2.0, 8.0, 16.0)
+    rows = tier_sweep(sizes_gb=sizes, bws_tbps=bws)
+    emit("fig_memtier", rows)
+    base = next(r for r in rows if r["tier"] == "none")
+    swept = [r for r in rows if r["tier"] != "none"]
+    improved = [r for r in swept if r["improved"]]
+    for r in rows:
+        tag = (f"{r['tier']:7s}" if r["tier"] == "none" else
+               f"{r['tier']} {r['size_gb']:g}GB@{r['bw_tbps']:g}TB/s")
+        print(f"  {tag:22s} round={r['round_ms']:.4f}ms "
+              f"speedup={r['speedup']:.4f} staged={r['staged_mb']:8.1f}MB "
+              f"sim/plan={r['plan_sim_ratio']:.3f}")
+    for r in swept:
+        if r["speedup"] < 1.0 - 1e-9:
+            bad.append(f"stacked {r['size_gb']}GB@{r['bw_tbps']}TB/s plans "
+                       f"slower than the base pod ({r['speedup']:.4f}x)")
+    if not improved:
+        bad.append("no swept stacked-DRAM point strictly improves the "
+                   "planned decode round")
+    for r in [base] + improved:
+        if not 0.5 <= r["plan_sim_ratio"] <= 2.0:
+            bad.append(f"{r['tier']} {r.get('size_gb', '')}: sim/plan "
+                       f"ratio {r['plan_sim_ratio']} outside 2x")
+    out = {"chip": chip.name, "model": "opt_30b", "two_tier_identical":
+           identical, "improved_points": len(improved),
+           "best_speedup": max((r["speedup"] for r in swept), default=1.0),
+           "rows": rows}
+    _write_json("BENCH_memtier.json", out)
+    if bad:
+        raise RuntimeError("; ".join(bad))
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--quick", "--fast", action="store_true", dest="quick",
@@ -310,6 +388,7 @@ def main(argv=None) -> None:
         ("bench_pipeline", lambda: bench_pipeline(quick)),
         ("bench_fusion", lambda: bench_fusion(quick)),
         ("bench_hybrid", lambda: bench_hybrid(quick)),
+        ("bench_memtier", lambda: bench_memtier(quick)),
         ("fig_fusion", paper_figs.fig_fusion),
         ("fig12_costmodel", paper_figs.fig12_costmodel),
         ("fig16_compile_time", paper_figs.fig16_compile_time),
@@ -329,7 +408,7 @@ def main(argv=None) -> None:
     if args.section:
         aliases = {"compile": "bench_compile", "serve": "bench_serve",
                    "pipeline": "bench_pipeline", "fusion": "bench_fusion",
-                   "hybrid": "bench_hybrid"}
+                   "hybrid": "bench_hybrid", "memtier": "bench_memtier"}
         wanted = {aliases.get(s, s) for s in args.section}
         known = {name for name, _ in sections}
         unknown = wanted - known
@@ -339,7 +418,8 @@ def main(argv=None) -> None:
         sections = [s for s in sections if s[0] in wanted]
     elif quick:
         keep = {"bench_compile", "bench_serve", "bench_pipeline",
-                "bench_fusion", "bench_hybrid", "fig12_costmodel",
+                "bench_fusion", "bench_hybrid", "bench_memtier",
+                "fig12_costmodel",
                 "fig18_breakdown", "fig24_topology", "validate_paper",
                 "roofline_table"}
         sections = [s for s in sections if s[0] in keep]

@@ -24,6 +24,36 @@ TB = 1024 * GB
 
 
 @dataclasses.dataclass(frozen=True)
+class MemoryTier:
+    """One level of the chip's memory hierarchy (DESIGN.md §10).
+
+    Ordered fastest (tier 0 = the cores' SRAM) to slowest (the unbounded
+    backing store, HBM/DRAM).  ``capacity <= 0`` marks the backing tier:
+    it holds everything that is not staged closer to the cores.
+    """
+    name: str
+    capacity: int          # aggregate bytes; <= 0 = unbounded backing store
+    bandwidth: float       # aggregate bytes/s toward the cores
+    latency: float = 0.0   # per-request latency (s)
+    controllers: int = 1
+
+    @property
+    def unbounded(self) -> bool:
+        return self.capacity <= 0
+
+
+# An ordered MemoryTier list; plain tuple alias so specs stay hashable and
+# usable inside the frozen ChipConfig / cache keys.
+MemorySpec = tuple
+
+# Tier names synthesized from the legacy scalar fields.  Custom tiers in
+# ``mem_tiers`` may use any other name; these two are always rebuilt from
+# ``sram_per_core``/``hbm_*`` so the scalars stay the single source of
+# truth (and ``scaled()``/``dataclasses.replace`` can never desync them).
+_RESERVED_TIER_NAMES = ("sram", "hbm")
+
+
+@dataclasses.dataclass(frozen=True)
 class ChipConfig:
     """One ICCA chip (or a multi-chip pod treated as one flat core pool)."""
 
@@ -50,6 +80,14 @@ class ChipConfig:
     # IPU-style SRAM port contention: remote reads block local compute (§2.3 ③,
     # footnote 2).  False for chips whose local memory is dual-ported.
     sram_port_blocking: bool = True
+    # Ordered memory hierarchy (DESIGN.md §10).  ``__post_init__`` always
+    # canonicalizes this to  (sram, *middle tiers, hbm?)  where the "sram"
+    # and "hbm" tiers are synthesized from the scalar fields above (hbm only
+    # when hbm_bw > 0) and the middle tiers (e.g. stacked DRAM) are kept from
+    # whatever was passed in.  Callers only ever *add* middle tiers — via
+    # ``with_stacked_dram()`` or by passing an existing ``mem_tiers`` through
+    # ``scaled()`` — so legacy scalar updates can never desync the spec.
+    mem_tiers: MemorySpec = ()
 
     def __post_init__(self):
         # fail at the construction site, not at the first chip.topo access
@@ -63,6 +101,24 @@ class ChipConfig:
                 "hier_pod needs inter_bw_ratio > 0 and "
                 f"inter_links_per_chip > 0, got {self.inter_bw_ratio!r} / "
                 f"{self.inter_links_per_chip!r}")
+        middles = tuple(t for t in self.mem_tiers
+                        if t.name not in _RESERVED_TIER_NAMES)
+        names = [t.name for t in middles]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate memory tier names: {names}")
+        for t in middles:
+            if t.capacity <= 0 or t.bandwidth <= 0:
+                raise ValueError(
+                    f"middle memory tier {t.name!r} needs capacity > 0 and "
+                    f"bandwidth > 0 (only the synthesized backing tier is "
+                    f"unbounded), got {t.capacity!r} / {t.bandwidth!r}")
+        tiers = (MemoryTier("sram", self.total_sram,
+                            self.num_cores * self.sram_bw_per_core,
+                            0.0, self.num_cores),) + middles
+        if self.hbm_bw > 0:
+            tiers += (MemoryTier("hbm", 0, self.hbm_bw, self.hbm_latency,
+                                 self.hbm_controllers),)
+        object.__setattr__(self, "mem_tiers", tiers)
 
     # ---- derived -----------------------------------------------------------
     @property
@@ -115,6 +171,41 @@ class ChipConfig:
         """Hashable topology identity for compile-pipeline cache keys."""
         return self.topo.signature()
 
+    # ---- memory hierarchy (DESIGN.md §10) ----------------------------------
+    @property
+    def mem_signature(self) -> tuple:
+        """Hashable memory-hierarchy identity for compile-pipeline cache
+        keys (the tier-list analogue of ``topo_signature``)."""
+        s = self.__dict__.get("_mem_sig")
+        if s is None:
+            s = tuple((t.name, t.capacity, t.bandwidth, t.latency,
+                       t.controllers) for t in self.mem_tiers)
+            object.__setattr__(self, "_mem_sig", s)
+        return s
+
+    @property
+    def backing_tier(self) -> int:
+        """Index of the tier that holds everything not staged closer to the
+        cores: the unbounded hbm tier when present, else the last tier."""
+        return len(self.mem_tiers) - 1
+
+    @property
+    def staging_tiers(self) -> tuple[int, ...]:
+        """Indices of capacity-bounded off-core tiers weight blocks can be
+        staged into (everything strictly between SRAM and the backing
+        store; empty for the default two-tier chips)."""
+        last = self.backing_tier
+        return tuple(k for k in range(1, len(self.mem_tiers))
+                     if k != last and not self.mem_tiers[k].unbounded)
+
+    def tier_capacity_per_core(self, tier: int) -> int:
+        """One core's share of a tier's capacity (tier 0 = the usable local
+        scratchpad; deeper tiers are chip-shared, split evenly)."""
+        if tier <= 0:
+            return self.usable_sram_per_core
+        t = self.mem_tiers[tier]
+        return t.capacity // max(self.num_cores, 1) if t.capacity > 0 else 0
+
     @property
     def noc_capacity(self) -> float:
         return self.topo.total_capacity
@@ -150,8 +241,33 @@ class ChipConfig:
         """Ring-collective time among ``width`` member chips (DESIGN.md §9)."""
         return self.topo.collective_time(kind, nbytes, width, link_class)
 
-    def scaled(self, **kw) -> "ChipConfig":
+    def scaled(self, mem_divide: float = 1, **kw) -> "ChipConfig":
+        """``dataclasses.replace`` plus memory-hierarchy scaling:
+        ``mem_divide=n`` hands out a 1/n share of every middle tier (used by
+        ``chip_view()`` to derive one member chip of a pod — the sram/hbm
+        tiers rescale automatically from the scalar fields)."""
+        if mem_divide != 1:
+            src = kw.get("mem_tiers", self.mem_tiers)
+            kw["mem_tiers"] = tuple(
+                dataclasses.replace(
+                    t,
+                    capacity=int(t.capacity / mem_divide),
+                    bandwidth=t.bandwidth / mem_divide,
+                    controllers=max(int(t.controllers / mem_divide), 1))
+                for t in src if t.name not in _RESERVED_TIER_NAMES)
         return dataclasses.replace(self, **kw)
+
+    def with_stacked_dram(self, capacity: int = 8 * GB,
+                          bandwidth: float = 2 * TB, *,
+                          latency: float = 5e-7, controllers: int = 8,
+                          name: str = "stacked") -> "ChipConfig":
+        """This chip plus a 3D-stacked DRAM tier between SRAM and HBM
+        (Voxel/DeepStack direction, DESIGN.md §10) — the sweepable design
+        point ``chip/dse.tier_sweep`` explores."""
+        tier = MemoryTier(name, capacity, bandwidth, latency, controllers)
+        middles = tuple(t for t in self.mem_tiers
+                        if t.name not in _RESERVED_TIER_NAMES)
+        return dataclasses.replace(self, mem_tiers=middles + (tier,))
 
 
 # ---------------------------------------------------------------------------

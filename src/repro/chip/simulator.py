@@ -3,9 +3,12 @@
 Simulates the execution of an ELK ``ExecutionPlan`` over contended
 resources, independently of the scheduler's own cost estimates:
 
-* **HBM** — serves preloads one at a time in preload order (§4.5 rule 2),
+* **Memory tiers** — every off-core tier of ``chip.mem_tiers`` (HBM,
+  stacked DRAM, ...) is its own contended resource serving *its* preloads
+  one at a time in preload order (§4.5 rule 2, per controller group),
   gated by on-chip space and MoE routing deps; each request pays the
-  chip's per-request ``hbm_latency``.
+  tier's per-request latency.  A two-tier chip reduces to the single
+  serial HBM server of the original model.
 * **NoC** — processor-sharing fluid model over the topology's *link
   classes* (``chip.topo.classes``): flat topologies expose one
   ``intra`` pool; the hierarchical pod adds a slower ``inter`` tier.
@@ -73,9 +76,17 @@ def simulate(plan: ExecutionPlan, chip: ChipConfig,
     caps = {lc.name: lc.capacity for lc in topo.classes}
     cap_total = topo.total_capacity
     cap_mem = chip.usable_sram_per_core
+    tiers = chip.mem_tiers
+    last_tier = len(tiers) - 1
 
     pi = plan.preload_order
     dec = {d.op_idx: d for d in plan.decisions}
+
+    def src_tier(j: int) -> int:
+        k = dec[j].src_tier
+        return k if 0 <= k <= last_tier else last_tier
+
+    op_tiers = {src_tier(j) for j in range(n)}
 
     def mk_flow(kind: str, nbytes: float, payload_demand: float,
                 latency: float) -> _Flow:
@@ -96,13 +107,16 @@ def simulate(plan: ExecutionPlan, chip: ChipConfig,
     t = 0.0
     next_pre = 0                       # index into pi
     pre_done = [False] * n
+    pre_started = [False] * n          # streaming on some tier server
     exe_done = [-1.0] * n
     space_used = 0.0
     cur = 0                            # next op to execute
-    # phases: per entity (hbm preload, executing op) a _Flow or timer
-    hbm_flow: Optional[_Flow] = None   # NoC side of the active preload
-    hbm_left = 0.0                     # HBM time remaining (s at full bw)
-    hbm_op = -1
+    # one serial preload server per source tier (§4.5 rule 2 per
+    # controller group); two-tier chips have exactly one server, the
+    # original single-HBM state machine
+    srv_op: dict[int, int] = {}        # tier -> op currently streaming
+    srv_flow: dict[int, Optional[_Flow]] = {}   # NoC side of each preload
+    srv_left: dict[int, float] = {}    # tier time remaining (s at full bw)
     exe_flow: Optional[_Flow] = None   # dist or rot flow of current op
     exe_left = 0.0                     # pure-compute seconds remaining
     exe_phase = "idle"                 # idle | dist | run
@@ -125,21 +139,45 @@ def simulate(plan: ExecutionPlan, chip: ChipConfig,
             return False
         return space_used + preload_space(j) <= cap_mem + _EPS
 
+    def tier_service_time(p, k: int) -> float:
+        """Tier-side roofline of one preload request (per-request latency +
+        volume at the tier's aggregate bandwidth; the ``hbm_bw`` argument
+        still overrides the backing tier for DSE-style sweeps)."""
+        if not (p and p.hbm_bytes) or k <= 0:
+            return 0.0
+        if k == last_tier and tiers[last_tier].unbounded:
+            return (p.hbm_bytes / hbm_bw + chip.hbm_latency) if hbm_bw else 0.0
+        tk = tiers[k]
+        return (p.hbm_bytes / tk.bandwidth + tk.latency) if tk.bandwidth \
+            else 0.0
+
     def start_next_preload(force: bool = False):
-        nonlocal next_pre, hbm_flow, hbm_left, hbm_op, space_used
-        if hbm_op >= 0:
-            # a preload is already streaming (§4.5 rule 2: one at a time);
-            # clobbering it here leaked its space and left it forever un-done,
-            # deadlocking the sim when its op came up for execution
-            return
-        while next_pre < n:
-            j = pi[next_pre]
-            if pre_done[j]:
-                next_pre += 1
+        nonlocal next_pre, space_used
+        # each tier serves one preload at a time (§4.5 rule 2; clobbering a
+        # streaming preload leaked its space and deadlocked the sim); scan
+        # pi from the head so every tier picks *its* ops in preload order
+        while next_pre < n and (pre_done[pi[next_pre]]
+                                or pre_started[pi[next_pre]]):
+            next_pre += 1
+        if len(srv_op) >= len(op_tiers):
+            return                     # every source tier already busy
+        m = next_pre
+        while m < n:
+            j = pi[m]
+            if pre_done[j] or pre_started[j]:
+                m += 1
                 continue
             if exe_done[j] >= 0:       # already executed (tiny op, no data)
                 pre_done[j] = True
-                next_pre += 1
+                if m == next_pre:
+                    next_pre += 1
+                m += 1
+                continue
+            k = src_tier(j)
+            if k in srv_op:
+                # this op's tier is busy; later ops on *other* tiers may
+                # still start (their chains run in parallel)
+                m += 1
                 continue
             if not can_start_preload(j):
                 # ``force`` models streaming-through under space pressure:
@@ -148,22 +186,28 @@ def simulate(plan: ExecutionPlan, chip: ChipConfig,
                 # hardware streams the tile through space freed as the
                 # blocking residents execute; the fluid accounting lets
                 # ``space_used`` transiently exceed the cap instead of
-                # wedging.  Routing deps are never forced.
+                # wedging.  Routing deps are never forced.  Space is
+                # claimed strictly in preload order: a space-blocked op
+                # stops the scan for every tier.
                 if not force or (graph.ops[j].preload_dep >= 0 and
                                  exe_done[graph.ops[j].preload_dep] < 0):
                     return
             p = dec[j].preload_plan
-            hbm_op = j
-            # per-request HBM latency + volume roofline (bugfix: the seed
+            srv_op[k] = j
+            # per-request tier latency + volume roofline (bugfix: the seed
             # simulator never charged hbm_latency/link_latency at all)
-            hbm_left = ((p.hbm_bytes / hbm_bw + chip.hbm_latency)
-                        if (p and hbm_bw and p.hbm_bytes) else 0.0)
+            srv_left[k] = tier_service_time(p, k)
             nbytes = p.noc_preload_bytes if p else 0.0
-            hbm_flow = mk_flow("preload", nbytes, topo.preload_delivery_bw,
-                               topo.preload_latency)
+            srv_flow[k] = mk_flow("preload", nbytes,
+                                  topo.preload_delivery_bw,
+                                  topo.preload_latency)
             space_used += preload_space(j)
-            next_pre += 1
-            return
+            pre_started[j] = True
+            if m == next_pre:
+                next_pre += 1
+            if force or len(srv_op) >= len(op_tiers):
+                return
+            m += 1
 
     def start_exec():
         nonlocal exe_flow, exe_left, exe_phase, space_used
@@ -193,11 +237,11 @@ def simulate(plan: ExecutionPlan, chip: ChipConfig,
     guard = 0
     while cur < n and guard < 400 * n + 20000:
         guard += 1
-        if exe_phase == "idle" and hbm_flow is None and hbm_left <= 0:
+        if exe_phase == "idle" and not srv_op:
             # deadlock-or-done check: try to make progress
             start_next_preload()
             start_exec()
-            if exe_phase == "idle" and hbm_op < 0:
+            if exe_phase == "idle" and not srv_op:
                 # nothing active: advance by marking next preload done
                 if next_pre >= n and cur < n and not pre_done[cur]:
                     pre_done[cur] = True     # defensive: zero-data op
@@ -207,14 +251,16 @@ def simulate(plan: ExecutionPlan, chip: ChipConfig,
                     # space-blocked with nothing draining: stream the next
                     # preload through (see start_next_preload)
                     start_next_preload(force=True)
-                    if hbm_op >= 0:
+                    if srv_op:
                         continue
                 if exe_phase == "idle":
                     break
 
         # per-link-class processor sharing: every active phase occupies its
         # share of each class it maps onto for the phase's whole lifetime
-        flows = [f for f in (hbm_flow, exe_flow) if f is not None]
+        flows = [f for f in srv_flow.values() if f is not None]
+        if exe_flow is not None:
+            flows.append(exe_flow)
         nact: dict = {}
         for f in flows:
             for c in f.rem:
@@ -234,8 +280,8 @@ def simulate(plan: ExecutionPlan, chip: ChipConfig,
 
         # time to next completion event
         dts = []
-        if hbm_op >= 0:
-            dts.append(max(hbm_left, flow_dt(hbm_flow)))
+        for k in srv_op:
+            dts.append(max(srv_left[k], flow_dt(srv_flow[k])))
         if exe_phase == "dist" and exe_flow:
             dts.append(flow_dt(exe_flow))
         elif exe_phase == "run":
@@ -245,11 +291,11 @@ def simulate(plan: ExecutionPlan, chip: ChipConfig,
         dt = max(min(dts), 1e-9)
 
         # advance
-        hbm_active = hbm_op >= 0
+        pre_active = bool(srv_op)
         exe_active = exe_phase != "idle"
-        if hbm_active and exe_active:
+        if pre_active and exe_active:
             overlap += dt
-        elif hbm_active:
+        elif pre_active:
             busy_hbm += dt
         elif exe_active:
             busy_exec += dt
@@ -271,9 +317,9 @@ def simulate(plan: ExecutionPlan, chip: ChipConfig,
                     served_total += served
             return served_total
 
-        if hbm_active:
-            hbm_left = max(0.0, hbm_left - dt)
-            noc_bytes_served += advance(hbm_flow)
+        for k in srv_op:
+            srv_left[k] = max(0.0, srv_left[k] - dt)
+            noc_bytes_served += advance(srv_flow[k])
         if exe_active:
             noc_bytes_served += advance(exe_flow)
         if exe_phase == "run":
@@ -281,10 +327,13 @@ def simulate(plan: ExecutionPlan, chip: ChipConfig,
         t += dt
 
         # completions
-        if hbm_active and hbm_left <= _EPS and (
-                hbm_flow is None or hbm_flow.done()):
-            pre_done[hbm_op] = True
-            hbm_op, hbm_flow, hbm_left = -1, None, 0.0
+        finished = [k for k in srv_op
+                    if srv_left[k] <= _EPS and (srv_flow[k] is None
+                                                or srv_flow[k].done())]
+        for k in finished:
+            pre_done[srv_op[k]] = True
+            del srv_op[k], srv_flow[k], srv_left[k]
+        if finished:
             start_next_preload()
         if exe_phase == "dist" and exe_flow and exe_flow.done():
             _enter_run()

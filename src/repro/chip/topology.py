@@ -227,7 +227,8 @@ class TopologyModel:
             name=f"{chip.name}/chip",
             num_cores=self.cores_per_chip, num_chips=1,
             hbm_bw=chip.hbm_bw / n,
-            hbm_controllers=max(chip.hbm_controllers // n, 1))
+            hbm_controllers=max(chip.hbm_controllers // n, 1),
+            mem_divide=n)
         return ChipView(member, n, self.bisection_bw / max(n - 1, 1),
                         2 * chip.link_latency, width)
 
@@ -445,7 +446,8 @@ class HierPodTopology(TopologyModel):
             name=f"{chip.name}/chip",
             num_cores=self.cores_per_chip, num_chips=1,
             hbm_bw=chip.hbm_bw / n,
-            hbm_controllers=max(chip.hbm_controllers // n, 1))
+            hbm_controllers=max(chip.hbm_controllers // n, 1),
+            mem_divide=n)
         # one boundary = the sending chip's gateway links; hops: one intra
         # hop to the gateway + one inter-chip hop
         by = {lc.name: lc.hop_latency for lc in self.classes}

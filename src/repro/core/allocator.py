@@ -30,6 +30,20 @@ head merge of the existing sequence with ``x``'s own step stream.
 ``add_item`` performs that merge; ``solve`` then just selects the shortest
 trace prefix whose freed space fits the capacity, reproducing a cold
 ``allocate()`` bit-for-bit at a fraction of the work.
+
+Tiered placement (DESIGN.md §10)
+--------------------------------
+With an N-tier ``ChipConfig.mem_tiers`` hierarchy each capacity-bounded
+store runs its *own* instance of the same greedy: a :class:`WindowItem`
+carries the tier its space is charged against, and ``IncrementalWindow``
+keeps one independent trace per tier (the pop-sequence subset property
+holds per store, so the warm-start/exact-incremental contract is
+preserved tier by tier).  Which tier a layer block is *sourced from* is
+decided up front by :func:`place_tiers`: a deterministic longest-first
+greedy that assigns blocks to the tier minimizing the steady-state
+bottleneck preload chain, never exceeding a staging tier's capacity and
+never beating the chain balance (a block stays in the backing store when
+promoting it would not shrink the bottleneck).
 """
 
 from __future__ import annotations
@@ -52,6 +66,7 @@ class WindowItem:
     plans: Sequence                 # ExecPlan list or PreloadPlan list
     fixed: bool = False             # plan already bound by an earlier window
     fixed_choice: int = 0
+    tier: int = 0                   # memory tier the plan's space lives in
 
 
 @dataclasses.dataclass
@@ -98,24 +113,25 @@ def _window_cost(chip: ChipConfig, items: Sequence[WindowItem],
     return cost, exec_t, dist_t, noc_t
 
 
-class IncrementalWindow:
-    """Exact incremental replay of the §4.3 greedy for a growing window."""
+class _TierGreedy:
+    """The §4.3 greedy trace for the items charged against one store."""
 
-    def __init__(self, chip: ChipConfig, capacity: Optional[int] = None):
-        self.chip = chip
-        self.cap = capacity if capacity is not None \
-            else chip.usable_sram_per_core
-        self.items: list[WindowItem] = []
+    __slots__ = ("cap", "base_space", "slots", "_streams", "_next",
+                 "_trace", "_cum", "_heap")
+
+    def __init__(self, cap: int):
+        self.cap = cap
         self.base_space = 0          # all items at their starting choice
+        self.slots: list[int] = []       # local slot -> global slot index
         self._streams: list[list] = []   # per slot: [(delta, freed), ...]
         self._next: list[int] = []       # per slot: first step not in trace
         self._trace: list[tuple] = []    # (delta, slot, freed) in pop order
         self._cum: list[float] = []      # prefix sums of freed space
         self._heap: list[tuple] = []     # (-delta, slot): heads beyond trace
 
-    def add_item(self, item: WindowItem) -> None:
-        slot = len(self.items)
-        self.items.append(item)
+    def add(self, item: WindowItem, global_slot: int) -> None:
+        slot = len(self.slots)
+        self.slots.append(global_slot)
         start = item.fixed_choice if item.fixed else 0
         self.base_space += item.plans[start].space
         steps: list[tuple] = []
@@ -173,10 +189,9 @@ class IncrementalWindow:
             heapq.heappush(self._heap, (-nd, slot))
         return True
 
-    def solve_core(self) -> tuple:
-        """Greedy result sans interconnect surcharge, cacheable by window
-        signature: (feasible, per-slot choices, space, exec_t, dist_t,
-        exec_noc_bytes)."""
+    def solve(self, counts: list[int]) -> bool:
+        """Run this store's greedy to its fitting prefix; scatter per-item
+        downgrade counts into the *global* ``counts`` array."""
         over = self.base_space - self.cap
         p = 0
         feasible = True
@@ -189,9 +204,51 @@ class IncrementalWindow:
             # shortest fitting prefix ends at the first entry >= over
             p = (bisect.bisect_left(self._cum, over) + 1 if feasible
                  else len(self._trace))
-        counts = [0] * len(self.items)
         for _, slot, _ in self._trace[:p]:
-            counts[slot] += 1
+            counts[self.slots[slot]] += 1
+        return feasible
+
+
+class IncrementalWindow:
+    """Exact incremental replay of the §4.3 greedy for a growing window.
+
+    One independent :class:`_TierGreedy` per memory tier touched by the
+    items (`WindowItem.tier`); the single-store behaviour — every item at
+    tier 0 — is bit-identical to the pre-tier implementation.
+    """
+
+    def __init__(self, chip: ChipConfig, capacity: Optional[int] = None):
+        self.chip = chip
+        self.cap = capacity if capacity is not None \
+            else chip.usable_sram_per_core
+        self.items: list[WindowItem] = []
+        self._tiers: dict[int, _TierGreedy] = {}
+
+    @property
+    def base_space(self) -> int:
+        return sum(t.base_space for t in self._tiers.values())
+
+    def _tier_state(self, tier: int) -> _TierGreedy:
+        st = self._tiers.get(tier)
+        if st is None:
+            cap = (self.cap if tier <= 0
+                   else self.chip.tier_capacity_per_core(tier))
+            st = self._tiers[tier] = _TierGreedy(cap)
+        return st
+
+    def add_item(self, item: WindowItem) -> None:
+        slot = len(self.items)
+        self.items.append(item)
+        self._tier_state(item.tier).add(item, slot)
+
+    def solve_core(self) -> tuple:
+        """Greedy result sans interconnect surcharge, cacheable by window
+        signature: (feasible, per-slot choices, space, exec_t, dist_t,
+        exec_noc_bytes)."""
+        counts = [0] * len(self.items)
+        feasible = True
+        for tier in sorted(self._tiers):
+            feasible &= self._tiers[tier].solve(counts)
         choices = []
         space = 0
         exec_t = dist_t = exec_noc = 0.0
@@ -235,3 +292,113 @@ def allocate(chip: ChipConfig, items: Sequence[WindowItem],
     for it in items:
         win.add_item(it)
     return win.solve(extra_preload_noc)
+
+
+# ---------------------------------------------------------------------------
+# Cross-tier source placement (DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TierPlacement:
+    """Where each layer weight block is sourced from, per memory tier."""
+    tier_of: tuple                 # per-op index into chip.mem_tiers
+    chains: tuple                  # per-tier steady serial preload chain (s)
+    staged_bytes: tuple            # bytes resident per tier (0: sram/backing)
+    noc_chain: float               # shared delivery-NoC serial floor (s)
+    fill_time: float               # one-time refill backing -> staged tiers
+
+    @property
+    def bottleneck(self) -> float:
+        return max(max(self.chains, default=0.0), self.noc_chain)
+
+
+def place_tiers(chip: ChipConfig, ops: Sequence, cost=None, *,
+                floor: float = 0.0) -> TierPlacement:
+    """Assign each op's weight block a source tier (§4.3 generalized to N
+    stores).
+
+    Preloads from one tier are served sequentially by its controllers
+    (paper §4.5), so the steady-state cost of a placement is the *longest
+    per-tier serial chain* — each block contributing
+    ``max(tier_time, noc_delivery)`` exactly as the schedule finalization
+    charges it — with the shared core-delivery NoC as a global floor no
+    promotion can beat.  ``floor`` (typically the execution-time chain)
+    joins that max: staging a block onto a slower tier lengthens its own
+    preload latency, so the greedy only moves blocks while the backing
+    chain genuinely binds the steady interval.  Blocks are placed
+    longest-first (LPT); each goes to the tier that minimizes the
+    resulting bottleneck, staging tiers competing only while they have
+    capacity left.  Ties keep the block in the backing store, so two-tier
+    chips reproduce the flat placement exactly and the result is never
+    worse than all-backing.
+    """
+    if cost is None:
+        from repro.core.cost_model import AnalyticCostModel
+        cost = AnalyticCostModel(chip)
+    tiers = chip.mem_tiers
+    backing = chip.backing_tier
+    staging = chip.staging_tiers
+    n = len(ops)
+    sizes = [int(getattr(op, "hbm_bytes", 0)) for op in ops]
+    tier_of = [backing] * n
+    chains = {k: 0.0 for k in (backing, *staging) if k > 0}
+    pre_bw = chip.preload_noc_bw
+    t_noc = [nbytes / pre_bw if pre_bw > 0 else 0.0 for nbytes in sizes]
+    noc_chain = sum(t_noc)
+    if staging and backing > 0:
+        used = {k: 0 for k in staging}
+        order = sorted((j for j in range(n) if sizes[j] > 0),
+                       key=lambda j: (-sizes[j], j))
+        for j in order:
+            nbytes = sizes[j]
+            best_k = backing
+            best_val = max(floor, noc_chain, max(chains.values()),
+                           chains[backing]
+                           + max(cost.tier_time(nbytes, backing), t_noc[j]))
+            for k in staging:
+                if used[k] + nbytes > tiers[k].capacity:
+                    continue
+                val = max(floor, noc_chain, max(chains.values()),
+                          chains[k] + max(cost.tier_time(nbytes, k), t_noc[j]))
+                # strictly-better only: ties stay in the backing store (and
+                # once the shared-NoC or execution floor dominates, nothing
+                # is staged)
+                if val < best_val * (1 - 1e-12):
+                    best_k, best_val = k, val
+            if best_k == backing:
+                # Latency-free fallback: even when the bottleneck chain
+                # cannot improve (execution-bound stage), moving a block to
+                # a tier that serves it at least as fast still drains the
+                # backing controller's queue sooner — the schedule's
+                # preload stalls shrink and nothing can get worse, since
+                # the block's own service time does not grow and the tier's
+                # chain stays within the all-backing trajectory.
+                svc_b = max(cost.tier_time(nbytes, backing), t_noc[j])
+                best_svc = svc_b
+                for k in staging:
+                    if used[k] + nbytes > tiers[k].capacity:
+                        continue
+                    svc_k = max(cost.tier_time(nbytes, k), t_noc[j])
+                    if (svc_k <= best_svc
+                            and chains[k] + svc_k <= chains[backing] + svc_b):
+                        best_k, best_svc = k, svc_k
+            tier_of[j] = best_k
+            chains[best_k] += max(cost.tier_time(nbytes, best_k), t_noc[j])
+            if best_k != backing:
+                used[best_k] += nbytes
+    elif backing > 0:
+        for j in range(n):
+            if sizes[j] > 0:
+                chains[backing] += max(cost.tier_time(sizes[j], backing),
+                                       t_noc[j])
+    staged = [0] * len(tiers)
+    for j, k in enumerate(tier_of):
+        if 0 < k < backing:
+            staged[k] += sizes[j]
+    fill = sum(cost.spill_time(staged[k], backing, k)
+               for k in range(len(tiers)) if staged[k] > 0)
+    chain_vec = [0.0] * len(tiers)
+    for k, v in chains.items():
+        chain_vec[k] = v
+    return TierPlacement(tuple(tier_of), tuple(chain_vec),
+                         tuple(staged), noc_chain, fill)

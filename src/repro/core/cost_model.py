@@ -93,6 +93,34 @@ class AnalyticCostModel:
             return 0.0
         return volume / c.hbm_bw + c.hbm_latency
 
+    def tier_time(self, volume: int, tier: int) -> float:
+        """Preload-source roofline for a block resident in memory tier
+        ``tier`` (DESIGN.md §10): its aggregate bandwidth plus per-request
+        latency.  Tier 0 is the cores' own SRAM — the block is already
+        resident, so sourcing it is free — and the backing tier reproduces
+        ``hbm_time`` exactly (same operands, same operation order)."""
+        if tier <= 0:
+            return 0.0
+        tiers = self.chip.mem_tiers
+        t = tiers[min(tier, len(tiers) - 1)]
+        if t.bandwidth <= 0:
+            return 0.0
+        return volume / t.bandwidth + t.latency
+
+    def spill_time(self, volume: int, src: int, dst: int) -> float:
+        """One-time staging transfer between two tiers (spill on the way
+        down, refill on the way up): the volume at the slower endpoint's
+        bandwidth plus both per-request latencies."""
+        if volume <= 0 or src == dst:
+            return 0.0
+        tiers = self.chip.mem_tiers
+        a = tiers[min(max(src, 0), len(tiers) - 1)]
+        b = tiers[min(max(dst, 0), len(tiers) - 1)]
+        bws = [t.bandwidth for t in (a, b) if t.bandwidth > 0]
+        if not bws:
+            return 0.0
+        return volume / min(bws) + a.latency + b.latency
+
     def collective_time(self, kind: str, nbytes: float, width: int,
                         link_class: str | None = None) -> float:
         """Ring-collective time among ``width`` chips of the pod this chip

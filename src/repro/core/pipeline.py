@@ -50,6 +50,20 @@ PIPELINE_PASSES = ("graph", "curves", "orders", "schedule", "finalize",
                    "select")
 
 
+def plan_signature(cfg: ModelConfig, chip: ChipConfig, *parts) -> tuple:
+    """The canonical plan-cache key prefix: model + chip identity plus the
+    chip's derived topology and memory-hierarchy signatures, followed by
+    the caller's own discriminating parts.
+
+    Every plan-level cache in the repo (``compile_pipeline``,
+    ``plan_pipeline``, ``plan_hybrid``) builds its key through this one
+    helper so a new hardware knob only has to be added here — forgetting
+    to thread it through some key assembly elsewhere was exactly how a
+    stale-hit bug could slip in.
+    """
+    return (cfg, chip, chip.topo_signature, chip.mem_signature) + parts
+
+
 # ---------------------------------------------------------------------------
 # pass 2 state: plan-curve cache
 # ---------------------------------------------------------------------------
@@ -67,10 +81,11 @@ class PlanCurveCache:
     def __init__(self, chip: ChipConfig, cost: Optional[AnalyticCostModel] = None):
         self.chip = chip
         self.cost = cost or AnalyticCostModel(chip)
-        # curves depend on topology through rotation/distribution costs;
-        # the signature in every key makes a topology change miss even if a
-        # cache instance were ever shared across chips
-        self._topo_sig = chip.topo_signature
+        # curves depend on topology through rotation/distribution costs
+        # (and, for capped variants, on the memory hierarchy); the combined
+        # hardware signature in every key makes a topology or tier change
+        # miss even if a cache instance were ever shared across chips
+        self._hw_sig = (chip.topo_signature, chip.mem_signature)
         self.hits = 0
         self.misses = 0
         self._exec: dict = {}        # sig -> [ExecPlan]
@@ -90,7 +105,7 @@ class PlanCurveCache:
     def exec_plans(self, op) -> list:
         # FusedOp signatures carry curve_signature_extra (incl. the fusion
         # version), so fused and plain curves can never share an entry
-        sig = (op_curve_signature(op), self._topo_sig)
+        sig = (op_curve_signature(op), self._hw_sig)
         got = self._exec.get(sig)
         if got is None:
             self.misses += 1
@@ -104,7 +119,7 @@ class PlanCurveCache:
 
     def exec_plans_capped(self, op, cap: int) -> list:
         """The Static/capped baselines' single fastest-fitting plan."""
-        sig = (op_curve_signature(op), self._topo_sig, "cap", cap)
+        sig = (op_curve_signature(op), self._hw_sig, "cap", cap)
         got = self._derived.get(sig)
         if got is None:
             self.misses += 1
@@ -117,7 +132,7 @@ class PlanCurveCache:
         return got
 
     def preload_plans(self, op, exec_plan) -> list:
-        sig = (op_curve_signature(op), self._topo_sig, exec_plan.key())
+        sig = (op_curve_signature(op), self._hw_sig, exec_plan.key())
         got = self._pre.get(sig)
         if got is None:
             self.misses += 1
@@ -129,7 +144,7 @@ class PlanCurveCache:
 
     def preload_plans_static(self, op, exec_plan, first: bool) -> list:
         """Static baseline: the max- or min-footprint plan only."""
-        sig = (op_curve_signature(op), self._topo_sig, exec_plan.key(),
+        sig = (op_curve_signature(op), self._hw_sig, exec_plan.key(),
                "static", first)
         got = self._derived.get(sig)
         if got is None:
@@ -293,8 +308,8 @@ def compile_pipeline(cfg: ModelConfig, chip: ChipConfig, *, batch: int,
         # plan-cache keys don't encode the cost model; a context with a
         # custom one must not poison (or read) default-cost entries
         cache = False
-    key = (cfg, chip, chip.topo_signature, fusion_signature(fusion), batch,
-           seq, phase, design, max_exact_ops, max_orders)
+    key = plan_signature(cfg, chip, fusion_signature(fusion), batch, seq,
+                         phase, design, max_exact_ops, max_orders)
     if cache:
         hit = _PLAN_CACHE.get(key)
         if hit is not None:
@@ -345,8 +360,8 @@ def _compile_variant(cfg, chip, batch, seq, phase, design, max_exact_ops,
 
 def _exact_plan(cfg, chip, batch, seq, phase, design, max_orders, ctx,
                 cache, parallel, fused: bool = False) -> ExecutionPlan:
-    key = (cfg, chip, chip.topo_signature, fusion_signature(fused), batch,
-           seq, phase, design, "exact", max_orders)
+    key = plan_signature(cfg, chip, fusion_signature(fused), batch, seq,
+                         phase, design, "exact", max_orders)
     if cache:
         hit = _PLAN_CACHE.get(key)
         if hit is not None:

@@ -63,7 +63,7 @@ from repro.chip.config import ChipConfig
 from repro.chip.topology import ChipView
 from repro.core.graph import OpGraph, Phase, build_graph
 from repro.core.partition import op_curve_signature
-from repro.core.pipeline import CompileContext, PlanCache
+from repro.core.pipeline import CompileContext, PlanCache, plan_signature
 from repro.core.plan import ExecutionPlan
 from repro.models.config import ModelConfig
 
@@ -285,21 +285,31 @@ def _shard_op(op, dim: int, width: int, *, all_inputs: bool):
 def steady_interval(plan: ExecutionPlan, chip: ChipConfig,
                     ctx: Optional[CompileContext] = None) -> float:
     """Throughput bound of a stage serving back-to-back microbatches: the
-    busier of the serial HBM/delivery chain (§4.5 rule 2) and the serial
-    execution chain, clamped to the plan's one-pass latency."""
+    busiest of the per-tier serial preload chains (§4.5 rule 2 — each
+    source tier's controllers serve sequentially), the shared delivery-NoC
+    chain, and the serial execution chain, clamped to the plan's one-pass
+    latency.  On a two-tier chip the single hbm chain makes this exactly
+    the pre-§10 ``sum(max(t_hbm, t_noc))`` bound."""
     cost = ctx.cost if ctx is not None else None
     pre_bw = chip.preload_noc_bw
-    hbm = 0.0
+    tiers = chip.mem_tiers
+    last = len(tiers) - 1
+    chains = [0.0] * (last + 1)
+    noc_chain = 0.0
     for d in plan.decisions:
         p = d.preload_plan
         if p is None or not (p.hbm_bytes or p.noc_preload_bytes):
             continue
+        k = d.src_tier if 0 <= d.src_tier <= last else last
         if cost is not None:
-            t_hbm = cost.hbm_time(p.hbm_bytes)
+            t_src = cost.tier_time(p.hbm_bytes, k)
         else:
-            t_hbm = (p.hbm_bytes / chip.hbm_bw + chip.hbm_latency) \
-                if chip.hbm_bw else 0.0
-        hbm += max(t_hbm, p.noc_preload_bytes / pre_bw)
+            t_src = (p.hbm_bytes / tiers[k].bandwidth + tiers[k].latency) \
+                if (k > 0 and tiers[k].bandwidth) else 0.0
+        t_noc = p.noc_preload_bytes / pre_bw
+        chains[k] += max(t_src, t_noc)
+        noc_chain += t_noc
+    hbm = max(max(chains), noc_chain)
     exe = sum(t.t_e_exe - t.t_s_exe for t in plan.timing)
     if plan.total_time <= 0:
         return max(hbm, exe)
@@ -527,8 +537,8 @@ def plan_pipeline(cfg: ModelConfig, chip: ChipConfig, *, batch: int,
     S = max(1, min(S, max(chip.num_chips, 1), cfg.num_layers))
     M = microbatches if microbatches is not None else S
     M = max(M, S)
-    key = (cfg, chip, chip.topo_signature, batch, seq, phase, design, S, M,
-           max_orders, max_exact_ops)
+    key = plan_signature(cfg, chip, batch, seq, phase, design, S, M,
+                         max_orders, max_exact_ops)
     if cache:
         hit = _PIPE_CACHE.get(key)
         if hit is not None:
@@ -546,6 +556,13 @@ def plan_pipeline(cfg: ModelConfig, chip: ChipConfig, *, batch: int,
                           max(chip.num_chips, 1), batch, batch, 1, (st,),
                           plan.total_time, plan.total_time, plan.total_time,
                           plan.total_time)
+        pp = _prefer_untiered(pp, cfg, chip, batch=batch, seq=seq,
+                              phase=phase, design=design,
+                              num_stages=num_stages,
+                              microbatches=microbatches,
+                              max_orders=max_orders,
+                              max_exact_ops=max_exact_ops,
+                              cut_slack=cut_slack, cache=cache)
         if cache:
             _PIPE_CACHE.put(key, pp)
         return pp
@@ -581,9 +598,31 @@ def plan_pipeline(cfg: ModelConfig, chip: ChipConfig, *, batch: int,
                       max(chip.num_chips, 1), b * M, b, M, tuple(stages),
                       interval, M * interval, fill,
                       fill + (M - 1) * interval)
+    pp = _prefer_untiered(pp, cfg, chip, batch=batch, seq=seq, phase=phase,
+                          design=design, num_stages=num_stages,
+                          microbatches=microbatches, max_orders=max_orders,
+                          max_exact_ops=max_exact_ops, cut_slack=cut_slack,
+                          cache=cache)
     if cache:
         _PIPE_CACHE.put(key, pp)
     return pp
+
+
+def _prefer_untiered(pp: PipelinePlan, cfg: ModelConfig, chip: ChipConfig,
+                     **kw) -> PipelinePlan:
+    """Staging-tier plans win strictly or not at all (DESIGN.md §10).
+
+    Candidate schedules inside a stage compile are selected on one-pass
+    latency, so a staged placement can flip the winner toward a plan with
+    worse steady throughput.  Planning the pod again with its middle tiers
+    stripped (exactly the two-tier baseline — usually a cache hit in any
+    sweep that also plans the base pod) and keeping the tiered plan only
+    when strictly better makes the tiered planner never worse by
+    construction."""
+    if not chip.staging_tiers:
+        return pp
+    base = plan_pipeline(cfg, dataclasses.replace(chip, mem_tiers=()), **kw)
+    return pp if pp.batch_interval < base.batch_interval else base
 
 
 # ---------------------------------------------------------------------------
@@ -714,9 +753,9 @@ def plan_hybrid(cfg: ModelConfig, chip: ChipConfig, *, batch: int,
     if not widths or not replicas:
         raise ValueError("widths/replicas must contain a value in "
                          f"[1, {C}]")
-    key = (cfg, chip, chip.topo_signature, batch, seq, phase, design,
-           "hybrid", widths, replicas, microbatches, max_orders,
-           max_exact_ops)
+    key = plan_signature(cfg, chip, batch, seq, phase, design, "hybrid",
+                         widths, replicas, microbatches, max_orders,
+                         max_exact_ops)
     if cache:
         hit = _PIPE_CACHE.get(key)
         if hit is not None:
@@ -753,6 +792,18 @@ def plan_hybrid(cfg: ModelConfig, chip: ChipConfig, *, batch: int,
             if hp is not None and (hp.batch_interval / hp.batch
                                    < best.batch_interval / best.batch):
                 best = hp
+    if chip.staging_tiers:
+        # same strictly-better-only rule as _prefer_untiered: a staged
+        # hybrid candidate must beat the whole untiered hybrid search
+        base = plan_hybrid(cfg, dataclasses.replace(chip, mem_tiers=()),
+                           batch=batch, seq=seq, phase=phase, design=design,
+                           widths=widths, replicas=replicas,
+                           microbatches=microbatches, max_orders=max_orders,
+                           max_exact_ops=max_exact_ops, cut_slack=cut_slack,
+                           cache=cache)
+        if not (best.batch_interval / best.batch
+                < base.batch_interval / base.batch):
+            best = base
     if cache:
         _PIPE_CACHE.put(key, best)
     return best

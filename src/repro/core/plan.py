@@ -24,6 +24,9 @@ class OpDecision:
     exec_plan: ExecPlan
     preload_plan: Optional[PreloadPlan]   # this op's own preload-state plan
     stall: float = 0.0               # interconnect-contention stall charged here
+    # memory tier the weight block is preloaded from (DESIGN.md §10);
+    # -1 = the chip's backing tier (legacy two-level plans)
+    src_tier: int = -1
 
 
 @dataclasses.dataclass

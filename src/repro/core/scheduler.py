@@ -33,7 +33,8 @@ from typing import Optional, Sequence
 
 from repro.chip.config import ChipConfig
 from repro.core.allocator import (IncrementalWindow, WindowItem,
-                                  _window_cost, core_to_allocation)
+                                  _window_cost, core_to_allocation,
+                                  place_tiers)
 from repro.core.cost_model import AnalyticCostModel
 from repro.core.fusion import graph_fusion_signature
 from repro.core.graph import OpGraph
@@ -83,8 +84,17 @@ class Scheduler:
         # invariant per chip/graph; cached off the property hot paths
         self._topo_sig = chip.topo_signature
         self._fusion_sig = graph_fusion_signature(graph)
+        self._mem_sig = chip.mem_signature
         self._preload_bw = chip.preload_noc_bw
         self.curves = [self._curves(op) for op in graph.ops]
+        # which memory tier each op's weight block is sourced from
+        # (DESIGN.md §10); all-backing for the default two-tier chips.
+        # The fastest-exec chain is the steady-interval floor: staging
+        # below it costs latency without buying throughput.
+        exe_floor = sum(min(p.time for p in curve)
+                        for curve in self.curves if curve)
+        self._tier_of = place_tiers(chip, graph.ops, self.cost,
+                                    floor=exe_floor).tier_of
         self._pre_memo: dict = {}
 
     # -- plan curves ---------------------------------------------------------
@@ -119,13 +129,15 @@ class Scheduler:
             uid = uid_of(it.plans)
             if uid is None:
                 return None
-            parts.append((uid, it.fixed, it.fixed_choice))
+            parts.append((uid, it.fixed, it.fixed_choice, it.tier))
         # topology signature: window costs fold in topology hop weights, so
         # a topology change must miss (contexts are per-chip, but be
         # explicit).  The fusion signature plays the same role for the §8
         # pass: fused and unfused schedules share a context but must never
-        # share a window solve.
-        return (cap, self._topo_sig, self._fusion_sig, tuple(parts))
+        # share a window solve, and the memory signature for §10: per-tier
+        # capacities change which greedy trace a window solves against.
+        return (cap, self._topo_sig, self._fusion_sig, self._mem_sig,
+                tuple(parts))
 
     # -- main entry -----------------------------------------------------------
     def schedule(self, preload_order: Optional[Sequence[int]] = None,
@@ -265,13 +277,18 @@ class Scheduler:
         return self._pre_curve(j, exec_choice[j])[-1].noc_preload_bytes
 
     def _preload_time(self, j: int, exec_choice: list[int]) -> float:
-        """Paper §4.2: max(HBM roofline time, interconnect transfer time)."""
+        """Paper §4.2: max(source-tier roofline time, interconnect transfer
+        time).  The backward pass prices every preload at the *backing*
+        tier, whatever its placement: issue decisions stay identical to the
+        untiered schedule, so staging can only shorten the per-tier queue
+        chains the forward finalization computes — never perturb the
+        window structure into a worse plan."""
         op = self.graph.ops[j]
         pre = self._pre_curve(j, exec_choice[j])
         plan = pre[-1]  # minimum-space estimate; finalization refines
-        t_hbm = self.cost.hbm_time(plan.hbm_bytes)
+        t_src = self.cost.tier_time(plan.hbm_bytes, self.chip.backing_tier)
         t_noc = plan.noc_preload_bytes / self._preload_bw
-        return max(t_hbm, t_noc)
+        return max(t_src, t_noc)
 
     # -- finalization ----------------------------------------------------------
     def _finalize(self, pi, pos, c_seq, exec_choice, design) -> ExecutionPlan:
@@ -345,21 +362,25 @@ class Scheduler:
                 idx += 1
             blocker_of[m] = b
 
+        # each source tier serves its preloads sequentially (§4.5, per
+        # controller group) — one free-at time per tier; a single-tier chip
+        # reduces to the original global chain bit-for-bit
         pre_bw = self._preload_bw
-        hbm_free = 0.0
+        tier_free: dict[int, float] = {}
         for m in range(n):
             j = pi[m]
             t_blocked = (timing[blocker_of[m]].t_e_exe
                          if blocker_of[m] >= 0 else 0.0)
             dep = graph.ops[j].preload_dep
             t_dep = timing[dep].t_e_exe if dep >= 0 else 0.0
-            t_start = max(hbm_free, t_blocked, t_dep)
+            tk = self._tier_of[j]
+            t_start = max(tier_free.get(tk, 0.0), t_blocked, t_dep)
             plan = bound_pre[j]
-            lpre = max(self.cost.hbm_time(plan.hbm_bytes),
+            lpre = max(self.cost.tier_time(plan.hbm_bytes, tk),
                        plan.noc_preload_bytes / pre_bw)
             timing[j].t_s_pre = t_start
             timing[j].t_e_pre = t_start + lpre
-            hbm_free = timing[j].t_e_pre
+            tier_free[tk] = timing[j].t_e_pre
             # exec timing interleaves: fill exec times for ops whose preload
             # completed — handled in second sweep below.
 
@@ -373,25 +394,27 @@ class Scheduler:
                 timing[i].t_s_exe = t_s
                 timing[i].t_e_exe = t_s + dist[i] + lexe[i] + stall[i]
                 t_prev = timing[i].t_e_exe
-            hbm_free = 0.0
+            tier_free = {}
             for m in range(n):
                 j = pi[m]
                 t_blocked = (timing[blocker_of[m]].t_e_exe
                              if blocker_of[m] >= 0 else 0.0)
                 dep = graph.ops[j].preload_dep
                 t_dep = timing[dep].t_e_exe if dep >= 0 else 0.0
-                t_start = max(hbm_free, t_blocked, t_dep)
+                tk = self._tier_of[j]
+                t_start = max(tier_free.get(tk, 0.0), t_blocked, t_dep)
                 plan = bound_pre[j]
-                lpre = max(self.cost.hbm_time(plan.hbm_bytes),
+                lpre = max(self.cost.tier_time(plan.hbm_bytes, tk),
                            plan.noc_preload_bytes / pre_bw)
                 timing[j].t_s_pre = t_start
                 timing[j].t_e_pre = t_start + lpre
-                hbm_free = timing[j].t_e_pre
+                tier_free[tk] = timing[j].t_e_pre
 
         total = timing[n - 1].t_e_exe if n else 0.0
         decisions = [OpDecision(i, c_seq[i] - (i + 1),
                                 self._exec_curve(i)[exec_choice[i]],
-                                bound_pre.get(i), stall[i])
+                                bound_pre.get(i), stall[i],
+                                src_tier=self._tier_of[i])
                      for i in range(n)]
         breakdown = _breakdown(timing, stall, total)
         util = _utilization(self, bound_pre, decisions, total)

@@ -62,6 +62,36 @@ class ServeConfig:
         return self.max_slots or self.batch
 
 
+def tier_kv_capacity(cfg: ModelConfig, chip, *, batch: int,
+                     kv_dtype: str = "bfloat16") -> int:
+    """Per-request KV-cache tokens resident in ``chip``'s off-core memory
+    tiers after weight placement (DESIGN.md §10), or 0 when unbounded.
+
+    The KV cache lives in the chip's non-SRAM tiers.  A chip with an
+    unbounded backing store (any ``hbm_bw > 0`` chip — including every
+    default two-tier config) can hold any cache length, so the budget is
+    infinite and this returns 0 ("no cap").  On an SRAM-only chip with
+    finite staging tiers (e.g. ``ipu_pod4().with_stacked_dram()``), the
+    stacked bytes left after the weights that spill out of SRAM bound the
+    cache:  ``tokens = (tier_bytes - weight_spill) // (batch * per_token)``
+    with ``per_token = num_layers * 2 * num_kv_heads * head_dim *
+    itemsize(kv_dtype)``.
+    """
+    if chip is None:
+        return 0
+    tiers = chip.mem_tiers[1:]
+    if not tiers or any(t.unbounded for t in tiers):
+        return 0
+    budget = sum(t.capacity for t in tiers)
+    weight_bytes = cfg.param_count() * jnp.dtype(cfg.param_dtype).itemsize
+    spill = max(0, weight_bytes - chip.total_sram)
+    left = budget - min(spill, budget)
+    hd = cfg.resolved_head_dim
+    per_token = (cfg.num_layers * 2 * cfg.num_kv_heads * hd
+                 * jnp.dtype(kv_dtype).itemsize)
+    return int(left // max(batch * per_token, 1))
+
+
 def elk_serve_config(cfg: ModelConfig, *, batch: int, cache_capacity: int,
                      kv_dtype: str = "bfloat16", num_chips: int = 256,
                      design: str = "ELK-Full", pipeline: bool = False,
@@ -90,6 +120,15 @@ def elk_serve_config(cfg: ModelConfig, *, batch: int, cache_capacity: int,
       the cache capacity so one chunk never wraps a request's own ring.
     """
     from repro.core.integration import pod_plan
+
+    # tier-resident KV budget (DESIGN.md §10): on a pod whose off-core
+    # memory is entirely finite, the cache can only grow to the staging
+    # bytes left after weight placement.  0 = unbounded (every two-tier
+    # default has an unbounded backing tier), so those configs are
+    # value-identical to the pre-tier behaviour.
+    cap = tier_kv_capacity(cfg, pod, batch=batch, kv_dtype=kv_dtype)
+    if cap > 0:
+        cache_capacity = min(cache_capacity, cap)
 
     knobs = pod_plan(cfg, batch=batch, seq=cache_capacity, phase="decode",
                      num_chips=num_chips, design=design,
