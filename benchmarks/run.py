@@ -142,7 +142,162 @@ def bench_serve(quick: bool = False) -> None:
               f"continuous={cont_stats['gen_tok_s']:8.1f} tok/s "
               f"p99={cont_stats['p99_latency_s']:.3f}s "
               f"({speedup:.2f}x)")
+
+    out["kv_offload"] = _bench_kv_offload(cfg, mesh, params, quick)
     _write_json("BENCH_serve.json", out)
+
+
+def _bench_kv_offload(cfg, mesh, params, quick: bool) -> dict:
+    """KV-cache tier offload + prefix reuse on a finite-backing-tier pod
+    (DESIGN.md §11), with the CI ``kvoffload-smoke`` gates:
+
+    (a) the oversubscribed batcher sustains >= the capacity-capped
+        baseline's gen tok/s on a bursty trace with 2x the physical slot
+        concurrency (the strict win is pinned deterministically in
+        ``tests/test_kv_offload.py`` via scheduler tick counts — wall
+        clock on shared CI only gates the ordering);
+    (b) prefix-cached greedy output is bit-identical to the cold
+        ``generate`` path;
+    (c) the event-simulated spill traffic prices within 2x of the
+        planner's ``slot_spill_s`` total (one shared cost vocabulary).
+    """
+    import dataclasses
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.chip.config import GB, ipu_mk2
+    from repro.chip.dse import kv_offload_sweep
+    from repro.chip.simulator import simulate_kv_traffic
+    from repro.serve.batcher import ContinuousBatcher, make_trace, summarize
+    from repro.serve.engine import ServeEngine, elk_serve_config
+    from repro.serve.prefix import PrefixStore
+
+    from repro.models import transformer as tfm
+
+    # a deeper smoke model than the serve bench's: per-tick decode compute
+    # must dominate the fixed per-dispatch overhead a refill pays, or the
+    # slots the capped scheduler idles during prefill cost nothing on CPU
+    cfg = dataclasses.replace(cfg, num_layers=max(cfg.num_layers, 8))
+    params = tfm.init_params(jax.random.PRNGKey(0), cfg)
+    chip = ipu_mk2().with_stacked_dram(2 * GB)
+    scfg = elk_serve_config(cfg, batch=2, cache_capacity=64, num_chips=1,
+                            pod=chip)
+    # measure the scheduler, not elk_stream's gather compile time (CPU CI)
+    scfg = dataclasses.replace(scfg, mode="gspmd", prefill_chunk=8)
+    eng = ServeEngine(cfg, mesh, params, scfg)
+    kv: dict = {"chip": "ipu_mk2 + 2GB stacked (all-finite)",
+                "oversub_k": round(scfg.oversub, 3),
+                "slot_spill_us": round(scfg.slot_spill_s * 1e6, 3),
+                "prefix_cache_mb": scfg.prefix_cache_bytes >> 20}
+
+    # the gate compares wall-clock throughput, so even --quick keeps the
+    # full trace: fewer requests shrink the measured win below CI noise
+    n = 16
+    # bursty arrivals at 2x the physical slot count, 3/4 sharing a
+    # two-chunk system prompt — the traffic prefix reuse feeds on (every
+    # prompt + its decode budget stays inside the 64-token ring)
+    trace = make_trace(n, vocab_size=cfg.vocab_size,
+                       prompt_lens=(18, 24, 30, 32), max_new=(6, 10, 14, 8),
+                       burst=2 * scfg.slots, sys_prompt_len=16,
+                       sys_prompt_frac=0.75, seed=7)
+    # warm every code path both runs will take — chunk jits, the slot step,
+    # and the extract/offload/refill jits — so neither timed run pays a
+    # compile
+    warm = make_trace(6, vocab_size=cfg.vocab_size,
+                      prompt_lens=(18, 24, 30, 40), seed=8)
+    ContinuousBatcher(eng, oversub=1.0).run(warm)
+    ContinuousBatcher(eng, oversub=scfg.oversub,
+                      prefix_store=PrefixStore(8 << 20)).run(warm)
+
+    def run_once(make_batcher):
+        bat = make_batcher()
+        t0 = time.perf_counter()
+        return bat, summarize(bat.run(trace), time.perf_counter() - t0)
+
+    def make_capped():
+        return ContinuousBatcher(eng, oversub=1.0)
+
+    def make_over():
+        # swap_after sized to the decode lengths: LRU swaps are the
+        # fairness lever, refill-ahead is the throughput one — a
+        # tick-scale timeslice would thrash rings mid-decode on requests
+        # this short
+        return ContinuousBatcher(eng, swap_after=16,
+                                 prefix_store=PrefixStore(
+                                     max(scfg.prefix_cache_bytes, 8 << 20)))
+
+    # interleaved best-of-3: a load spike on shared CI hits both arms of
+    # the comparison instead of deciding the throughput gate
+    capped = over = None
+    for _ in range(3):
+        c, o = run_once(make_capped), run_once(make_over)
+        if capped is None or c[1]["gen_tok_s"] > capped[1]["gen_tok_s"]:
+            capped = c
+        if over is None or o[1]["gen_tok_s"] > over[1]["gen_tok_s"]:
+            over = o
+    capped, capped_stats = capped
+    over, over_stats = over
+    kv["capped"] = capped_stats
+    kv["oversubscribed"] = over_stats
+    kv["spill_events"] = len(over.spill_events)
+    kv["prefix_hits"] = over.prefix_hits
+    kv["prefix_tokens_saved"] = over.prefix_tokens_saved
+    print(f"  kv_offload K={scfg.oversub:.1f}: "
+          f"capped={capped_stats['gen_tok_s']:.1f} tok/s | "
+          f"oversub={over_stats['gen_tok_s']:.1f} tok/s "
+          f"(p50 ttft {capped_stats['p50_ttft_s']:.3f}s -> "
+          f"{over_stats['p50_ttft_s']:.3f}s, "
+          f"{over.prefix_hits} prefix hits, "
+          f"{len(over.spill_events)} spills)")
+
+    if scfg.oversub <= 1.0:
+        raise RuntimeError("finite-tier config did not produce K>1")
+    if over_stats["gen_tok_s"] < capped_stats["gen_tok_s"]:
+        raise RuntimeError(
+            f"oversubscribed throughput {over_stats['gen_tok_s']} tok/s "
+            f"fell below the capacity-capped baseline "
+            f"{capped_stats['gen_tok_s']} tok/s")
+
+    # (b) prefix-hit bit-identity against the cold generate path
+    store = PrefixStore(8 << 20)
+    by_rid = {r.rid: r for r in trace}
+    probe = [r for r in trace if len(r.prompt) > 8][:3]
+    ContinuousBatcher(eng, prefix_store=store).run(
+        [dataclasses.replace(probe[0])])          # warm the store
+    if store.hits + len(store) == 0:
+        raise RuntimeError("prefix store took no snapshots")
+    outs = ContinuousBatcher(eng, prefix_store=store).run(probe)
+    if store.hits == 0:
+        raise RuntimeError("prefix store saw no hits on repeated prompts")
+    for c in outs:
+        r = by_rid[c.rid]
+        ref = np.asarray(eng.generate(
+            jnp.tile(jnp.asarray(r.prompt)[None, :], (scfg.batch, 1)),
+            steps=r.max_new_tokens))[0]
+        if not np.array_equal(c.tokens, ref):
+            raise RuntimeError(
+                f"prefix-cached output diverged from cold generate for "
+                f"request {c.rid}")
+    kv["prefix_bit_identical"] = True
+
+    # (c) sim-vs-planner spill pricing within 2x
+    if over.spill_events:
+        sim = simulate_kv_traffic(chip, over.spill_events)
+        ratio = sim.total_time / max(over.planned_spill_s, 1e-12)
+        kv["planned_spill_s"] = round(over.planned_spill_s, 6)
+        kv["sim_spill_s"] = round(sim.total_time, 6)
+        kv["spill_plan_sim_ratio"] = round(ratio, 3)
+        if not 0.5 <= ratio <= 2.0:
+            raise RuntimeError(
+                f"simulated spill traffic deviates >2x from the planner: "
+                f"ratio={ratio:.3f}")
+
+    kv["sweep"] = kv_offload_sweep(smoke=False, sizes_gb=(16, 64),
+                                   slots=4) if quick else \
+        kv_offload_sweep(smoke=False)
+    return kv
 
 
 def bench_pipeline(quick: bool = False) -> None:

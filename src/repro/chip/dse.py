@@ -283,3 +283,46 @@ def tier_sweep(model: str = "opt_30b", *,
                 if pp.interval else "",
             })
     return rows
+
+
+def kv_offload_sweep(model: str = "opt_30b", *,
+                     sizes_gb: Sequence[float] = (16, 32, 64, 128),
+                     bw_tbps: float = 2.0, slots: int = 4,
+                     cache_capacity: int = 2048,
+                     kv_dtype: str = "bfloat16",
+                     smoke: bool = False) -> list[dict]:
+    """Backing-tier size sweep of the serve-side KV offload design space
+    (DESIGN.md §11): for each stacked-DRAM size on an SRAM-only chip
+    (``ipu_mk2`` — no unbounded HBM, so the whole hierarchy is finite),
+    the static per-request budget (``tier_kv_capacity``), the admission
+    multiplier K (``tier_kv_oversub``), one slot-ring spill/refill time
+    (``AnalyticCostModel.spill_time``), and the rings the tier holds —
+    how much serving concurrency each GB of stacked capacity buys."""
+    from repro.chip.config import GB, TB, ipu_mk2
+    from repro.configs import get_config, get_smoke_config
+    from repro.core.cost_model import AnalyticCostModel
+    from repro.serve.engine import (_tier_bytes_left, kv_ring_bytes,
+                                    tier_kv_capacity, tier_kv_oversub)
+
+    cfg = get_smoke_config(model) if smoke else get_config(model)
+    ring = kv_ring_bytes(cfg, cache_capacity, kv_dtype)
+    rows = []
+    for size in sizes_gb:
+        chip = ipu_mk2().with_stacked_dram(int(size * GB), bw_tbps * TB)
+        cap = tier_kv_capacity(cfg, chip, batch=slots, kv_dtype=kv_dtype)
+        k = tier_kv_oversub(cfg, chip, slots=slots,
+                            cache_capacity=cache_capacity,
+                            kv_dtype=kv_dtype)
+        spill = AnalyticCostModel(chip).spill_time(ring, 0,
+                                                   chip.backing_tier)
+        rows.append({
+            "model": cfg.name, "slots": slots,
+            "cache_capacity": cache_capacity,
+            "size_gb": size, "bw_tbps": bw_tbps,
+            "kv_tokens_per_req": cap,
+            "rings": int(_tier_bytes_left(cfg, chip) // max(ring, 1)),
+            "oversub_k": round(k, 3),
+            "ring_mb": round(ring / 1e6, 3),
+            "slot_spill_us": round(spill * 1e6, 3),
+        })
+    return rows

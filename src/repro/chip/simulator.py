@@ -489,3 +489,52 @@ def simulate_pipeline(pplan: "PipelinePlan", chip: ChipConfig,
         stage_ivals = [((e[M - 1] - e[0]) / (M - 1)) if M > 1 else e[0]
                        for e in ends]
     return PipelineSimResult(out[Mt - 1], interval, out[0], stage_ivals, out)
+
+
+# ---------------------------------------------------------------------------
+# KV offload traffic (serve-side spills, DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class KVTrafficResult:
+    total_time: float        # completion of the last transfer
+    busy: dict               # tier index -> busy seconds on its server
+    finish: list             # per-event completion times, input order
+
+
+def simulate_kv_traffic(chip: ChipConfig, events, *, src: int = 0,
+                        dst: Optional[int] = None) -> KVTrafficResult:
+    """Serve the batcher's KV spill/refill events on the per-tier serial
+    resources this simulator already models (§4.5 rule 2: one transfer at
+    a time per off-core tier).
+
+    ``events`` is ``ContinuousBatcher.spill_events``-shaped: ``(kind,
+    nbytes)`` or ``(kind, nbytes, at)`` with ``at`` the earliest start
+    time.  Every transfer moves one slot's ring between tier ``src``
+    (default: the cores' SRAM) and ``dst`` (default: the chip's backing
+    tier) and holds each *off-core* endpoint's server for
+    ``AnalyticCostModel.spill_time`` — the identical pricing vocabulary
+    the planner's ``ServeConfig.slot_spill_s`` uses, so plan-vs-sim
+    agreement is a consistency gate (CI ``kvoffload-smoke``), with the
+    simulator adding only the serialization a shared tier imposes."""
+    from repro.core.cost_model import AnalyticCostModel
+
+    cm = AnalyticCostModel(chip)
+    if dst is None:
+        dst = chip.backing_tier
+    free: dict = {}
+    busy: dict = {}
+    finish = []
+    for ev in events:
+        kind, nbytes = ev[0], ev[1]
+        at = float(ev[2]) if len(ev) > 2 else 0.0
+        svc = cm.spill_time(nbytes, src, dst)
+        start = max([at] + [free.get(t, 0.0) for t in (src, dst) if t > 0])
+        end = start + svc
+        for t in (src, dst):
+            if t > 0:
+                free[t] = end
+                busy[t] = busy.get(t, 0.0) + svc
+        finish.append(end)
+    return KVTrafficResult(total_time=max(finish, default=0.0), busy=busy,
+                           finish=finish)

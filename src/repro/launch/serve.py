@@ -32,16 +32,30 @@ def _run_trace(eng: ServeEngine, args, vocab: int) -> dict:
 
     trace = make_trace(args.trace, vocab_size=vocab,
                        arrival_spacing_s=args.arrival_spacing,
-                       seed=args.trace_seed)
+                       seed=args.trace_seed, burst=args.burst,
+                       sys_prompt_len=args.sys_prompt_len,
+                       sys_prompt_frac=args.sys_prompt_frac)
     # warm the compile caches so the numbers are steady-state serving
     warm = make_trace(min(4, args.trace), vocab_size=vocab,
                       seed=args.trace_seed + 1)
     ContinuousBatcher(eng).run(warm)
 
+    prefix_store = None
+    if args.prefix_cache_mb > 0:
+        from repro.serve.prefix import PrefixStore
+        prefix_store = PrefixStore(args.prefix_cache_mb << 20)
+    oversub = args.oversub if args.oversub > 0 else None
+    bat = ContinuousBatcher(eng, oversub=oversub, prefix_store=prefix_store)
     t0 = time.perf_counter()
-    completions = ContinuousBatcher(eng).run(trace)
+    completions = bat.run(trace)
     stats = {"continuous": summarize(completions,
                                      time.perf_counter() - t0)}
+    stats["continuous"]["oversub"] = round(bat.oversub, 3)
+    stats["continuous"]["spill_events"] = len(bat.spill_events)
+    stats["continuous"]["planned_spill_s"] = round(bat.planned_spill_s, 6)
+    if bat.prefix is not None:
+        stats["continuous"]["prefix_hits"] = bat.prefix_hits
+        stats["continuous"]["prefix_tokens_saved"] = bat.prefix_tokens_saved
     order = [c.rid for c in completions]
     print(f"continuous: {stats['continuous']}  finish order: {order}")
 
@@ -82,6 +96,24 @@ def main() -> None:
     ap.add_argument("--trace-seed", type=int, default=0)
     ap.add_argument("--arrival-spacing", type=float, default=0.0,
                     help="seconds between request arrivals in --trace mode")
+    ap.add_argument("--burst", type=int, default=1,
+                    help="bursty arrivals: requests land in groups of this "
+                         "size sharing one arrival time")
+    ap.add_argument("--sys-prompt-len", type=int, default=0,
+                    help="length of a shared system prompt prepended to "
+                         "--sys-prompt-frac of the trace (prefix reuse)")
+    ap.add_argument("--sys-prompt-frac", type=float, default=0.0)
+    ap.add_argument("--oversub", type=float, default=0.0,
+                    help="admission multiplier K over the physical slots "
+                         "(0 = take K from the plan; needs a finite "
+                         "backing tier, e.g. --stacked-gb)")
+    ap.add_argument("--prefix-cache-mb", type=int, default=0,
+                    help="prefix-KV store budget in MB (0 = plan-sized, "
+                         "off unless the pod funds it)")
+    ap.add_argument("--stacked-gb", type=float, default=0.0,
+                    help="plan against an SRAM-only pod with this much "
+                         "stacked DRAM (all-finite hierarchy: enables KV "
+                         "offload + oversubscription, DESIGN.md §11)")
     ap.add_argument("--compare-static", action="store_true",
                     help="also run the static-batching baseline on the "
                          "same trace")
@@ -101,6 +133,9 @@ def main() -> None:
         if args.pipeline_pod > 0:
             from repro.chip.config import tpu_v5e_pod_hier
             pod = tpu_v5e_pod_hier(groups=args.pipeline_pod)
+        elif args.stacked_gb > 0:
+            from repro.chip.config import GB, ipu_mk2
+            pod = ipu_mk2().with_stacked_dram(int(args.stacked_gb * GB))
         scfg = elk_serve_config(cfg, batch=args.batch,
                                 cache_capacity=args.cache,
                                 kv_dtype=args.kv_dtype,
@@ -110,6 +145,10 @@ def main() -> None:
         if scfg.steady_interval_s:
             msg += (f" steady_interval="
                     f"{scfg.steady_interval_s * 1e3:.3f}ms")
+        if scfg.oversub > 1.0:
+            msg += (f" oversub K={scfg.oversub:.2f} "
+                    f"slot_spill={scfg.slot_spill_s * 1e6:.1f}us "
+                    f"prefix_cache={scfg.prefix_cache_bytes >> 20}MB")
         print(msg)
     else:
         scfg = ServeConfig(

@@ -904,6 +904,16 @@ def cache_insert_slot(cache: dict, slot: jax.Array, req_cache: dict) -> dict:
     return out
 
 
+def cache_extract_slot(cache: dict, slot: jax.Array) -> dict:
+    """Inverse of ``cache_insert_slot``: slice one request's batch-1 cache
+    (KV ring plus ``pos``/``slot_pos`` metadata) out of a per-slot batch
+    cache.  Extract-then-insert round-trips bit-identically — the spill
+    path of the serve engine's ``offload_slot``/``refill_slot``."""
+    return {key: lax.dynamic_slice_in_dim(buf, slot, 1,
+                                          axis=_slot_batch_axis(key))
+            for key, buf in cache.items()}
+
+
 def cache_evict_slot(cache: dict, slot: jax.Array) -> dict:
     """Free a slot: reset its position and mask every ring tag so the stale
     K/V is unreachable.  The buffers themselves are left in place."""

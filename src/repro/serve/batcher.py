@@ -18,6 +18,19 @@ instead (DESIGN.md §6):
 * a finished request **leaves its slot immediately** — the next queued
   request takes it over while the others keep decoding.
 
+With a finite backing tier (``ServeConfig.oversub`` = K > 1, DESIGN.md
+§11) the batcher **oversubscribes**: up to K× the physical slot count may
+be in flight.  Requests admitted while every slot is busy prefill *ahead*
+into a slotless cache and park offloaded (host copy = the backing tier);
+a refill-ahead hook moves the longest-waiting spilled request into each
+slot the moment it frees, and an LRU policy over decode recency
+(residency-age tiebreak) swaps a long-running resident out for a starving
+waiter — each move priced at ``ServeConfig.slot_spill_s`` and recorded in
+``spill_events`` so the event simulator can re-price the same traffic
+(``chip.simulator.simulate_kv_traffic``).  Offload→refill round-trips are
+bit-identical (slot extract/insert are exact slices), so oversubscribed
+greedy output equals running each request alone.
+
 The decode hot loop is one donated ``engine.step`` per tick regardless of
 how requests come and go, so throughput tracks slot occupancy instead of
 the lock-step batch's worst case.  Greedy outputs are bit-identical to
@@ -31,6 +44,7 @@ import time
 from collections import deque
 from typing import Callable, Optional
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -53,10 +67,20 @@ class Completion:
     arrival_s: float
     finish_s: float
     finish_order: int
+    first_token_s: float = -1.0   # when the first new token appeared
+    #                               (-1: degenerate request, no token)
 
     @property
     def latency_s(self) -> float:
         return self.finish_s - self.arrival_s
+
+    @property
+    def ttft_s(self) -> float:
+        """Time to first token — what a prefix-cache hit or chunked refill
+        actually buys an interactive request."""
+        if self.first_token_s < 0:
+            return self.latency_s
+        return self.first_token_s - self.arrival_s
 
 
 @dataclasses.dataclass
@@ -64,13 +88,30 @@ class _Prefill:
     req: Request
     cache: dict
     off: int                      # prompt tokens already processed
-    slot: int                     # reserved destination slot
+    slot: int                     # reserved destination slot (-1: prefill
+    #                               ahead, will park offloaded)
 
 
 @dataclasses.dataclass
 class _Active:
     req: Request
     generated: list
+    first_s: float = -1.0         # first-token time (from trace start)
+    last_step: int = 0            # tick of the slot's last decode step
+    since: int = 0                # tick the request became resident
+
+
+@dataclasses.dataclass
+class _Spilled:
+    """A request whose KV ring lives on the backing tier: either prefilled
+    ahead of any free slot or swapped out mid-decode by the LRU policy."""
+    req: Request
+    generated: list
+    pending: int                  # next token to feed after refill
+    state: dict                   # host-resident slot state (real copies)
+    first_s: float
+    spilled_at: int               # tick it left (or never entered) a slot
+    last_step: int                # decode recency carried across the spill
 
 
 def _chunk_len(remaining: int, budget: int) -> int:
@@ -91,7 +132,9 @@ class ContinuousBatcher:
     """
 
     def __init__(self, engine: ServeEngine,
-                 clock: Callable[[], float] = time.perf_counter):
+                 clock: Callable[[], float] = time.perf_counter, *,
+                 oversub: Optional[float] = None,
+                 prefix_store=None, swap_after: int = 4):
         self.engine = engine
         self.slots = engine.scfg.slots
         # admission budget: the ELK-sized prefill chunk (gather-ahead window
@@ -100,13 +143,34 @@ class ContinuousBatcher:
         # mid-chunk; clamp whatever the config asked for.
         self.chunk_budget = max(1, min(engine.scfg.prefill_chunk,
                                        engine.scfg.cache_capacity))
+        # oversubscription (DESIGN.md §11): K from the plan unless the
+        # caller pins it; K=1 reproduces the slot-capped scheduler exactly.
+        self.oversub = engine.scfg.oversub if oversub is None else oversub
+        self.virtual_slots = max(self.slots,
+                                 int(round(self.slots * self.oversub)))
+        self.swap_after = max(1, swap_after)
+        # the plan-funded store rides along with oversubscription; a K=1
+        # batcher stays byte-for-byte the PR-8 scheduler unless the caller
+        # hands it a store explicitly
+        if prefix_store is None and self.oversub > 1.0 \
+                and engine.scfg.prefix_cache_bytes > 0:
+            from repro.serve.prefix import PrefixStore
+            prefix_store = PrefixStore(engine.scfg.prefix_cache_bytes)
+        self.prefix = prefix_store
         self.clock = clock
         self.queue: deque[Request] = deque()
         self.prefilling: Optional[_Prefill] = None
         self.active: dict[int, _Active] = {}
+        self.spilled: dict[int, _Spilled] = {}      # rid -> parked state
         self.free = list(range(self.slots))[::-1]   # pop() -> lowest slot
         self.tokens = np.zeros((self.slots,), np.int32)
         self.completed: list[Completion] = []
+        self.ticks = 0
+        self.spill_events: list[tuple[str, int]] = []   # (kind, nbytes)
+        self.planned_spill_s = 0.0
+        self.prefix_hits = 0
+        self.prefix_tokens_saved = 0
+        self._ring_bytes = 0
         self.t0 = self.clock()
 
     # -- scheduling --------------------------------------------------------
@@ -118,24 +182,56 @@ class ContinuousBatcher:
 
     @property
     def busy(self) -> bool:
-        return bool(self.queue or self.prefilling or self.active)
+        return bool(self.queue or self.prefilling or self.active
+                    or self.spilled)
 
-    def _finish(self, req: Request, new_tokens: list) -> None:
+    def _now(self) -> float:
+        return self.clock() - self.t0
+
+    def _finish(self, req: Request, new_tokens: list,
+                first_s: float = -1.0) -> None:
         toks = np.concatenate([np.asarray(req.prompt, np.int32),
                                np.asarray(new_tokens, np.int32)])
         self.completed.append(Completion(
             rid=req.rid, tokens=toks, prompt_len=len(req.prompt),
-            arrival_s=req.arrival_s, finish_s=self.clock() - self.t0,
-            finish_order=len(self.completed)))
+            arrival_s=req.arrival_s, finish_s=self._now(),
+            finish_order=len(self.completed), first_token_s=first_s))
+
+    def _charge(self, kind: str) -> None:
+        """Record one ring move across the tier boundary, accumulating the
+        plan-priced cost (the simulator re-prices the same event list)."""
+        if not self._ring_bytes:
+            self._ring_bytes = self.engine.slot_state_bytes()
+        self.spill_events.append((kind, self._ring_bytes))
+        self.planned_spill_s += self.engine.scfg.slot_spill_s
 
     def _admit(self) -> None:
         while self.queue and self.queue[0].max_new_tokens <= 0:
             self._finish(self.queue.popleft(), [])
-        if self.prefilling is None and self.queue and self.free:
-            req = self.queue.popleft()
-            self.prefilling = _Prefill(
-                req=req, cache=self.engine.new_request_cache(), off=0,
-                slot=self.free.pop())
+        if self.prefilling is not None or not self.queue:
+            return
+        inflight = len(self.active) + len(self.spilled)
+        if self.free:
+            slot = self.free.pop()
+        elif self.oversub > 1.0 and inflight < self.virtual_slots:
+            slot = -1       # prefill ahead; the finished ring parks spilled
+        else:
+            return
+        req = self.queue.popleft()
+        cache, off = self.engine.new_request_cache(), 0
+        if self.prefix is not None:
+            hit = self.prefix.lookup(
+                req.prompt, max_len=min(len(req.prompt) - 1,
+                                        self.engine.scfg.cache_capacity))
+            if hit is not None:
+                off, state = hit
+                # restore = one refill off the backing tier; jnp.array in
+                # refill/prefill copies, so the stored state stays intact
+                cache = jax.tree.map(lambda a: jnp.array(a), state)
+                self._charge("refill")
+                self.prefix_hits += 1
+                self.prefix_tokens_saved += off
+        self.prefilling = _Prefill(req=req, cache=cache, off=off, slot=slot)
 
     def _prefill_tick(self) -> None:
         ps = self.prefilling
@@ -147,16 +243,84 @@ class ContinuousBatcher:
         tok, ps.cache = self.engine.prefill_chunk(ps.cache, chunk)
         ps.off += t
         if ps.off < len(ps.req.prompt):
+            # snapshot at the chunk boundary: a strict in-capacity prefix
+            # whose ring has never wrapped — the prefix store's unit of
+            # reuse (np.array = real host copies of donated buffers)
+            if (self.prefix is not None
+                    and ps.off <= self.engine.scfg.cache_capacity):
+                self.prefix.put(ps.req.prompt[:ps.off],
+                                jax.tree.map(lambda a: np.array(a),
+                                             ps.cache))
             return
         first = int(tok[0])
+        now = self._now()
         if ps.req.max_new_tokens == 1:      # no decode needed
-            self._finish(ps.req, [first])
-            self.free.append(ps.slot)
-        else:
+            self._finish(ps.req, [first], first_s=now)
+            if ps.slot >= 0:
+                self.free.append(ps.slot)
+        elif ps.slot >= 0:
             self.engine.insert_slot(ps.slot, ps.cache)
-            self.active[ps.slot] = _Active(req=ps.req, generated=[first])
+            self.active[ps.slot] = _Active(
+                req=ps.req, generated=[first], first_s=now,
+                last_step=self.ticks, since=self.ticks)
             self.tokens[ps.slot] = first
+        else:
+            # prefilled ahead of any free slot: park on the backing tier
+            state = jax.tree.map(lambda a: np.array(a), ps.cache)
+            self.spilled[ps.req.rid] = _Spilled(
+                req=ps.req, generated=[first], pending=first, state=state,
+                first_s=now, spilled_at=self.ticks, last_step=self.ticks)
+            self._charge("spill")
         self.prefilling = None
+
+    def _lru_waiter(self) -> int:
+        """rid of the spilled request to refill next: least-recently
+        decoded, then longest parked."""
+        return min(self.spilled,
+                   key=lambda r: (self.spilled[r].last_step,
+                                  self.spilled[r].spilled_at, r))
+
+    def _maybe_swap(self) -> None:
+        """LRU eviction over decode recency: when a spilled request has
+        waited >= ``swap_after`` ticks and no slot is free, offload the
+        least-recently-stepped resident (ties: longest resident) so the
+        waiter gets its turn — time-slicing K virtual streams over the
+        physical slots without starving any of them."""
+        if self.free or not self.spilled or not self.active:
+            return
+        sp = self.spilled[self._lru_waiter()]
+        if self.ticks - sp.spilled_at < self.swap_after:
+            return
+        victim = min(self.active,
+                     key=lambda s: (self.active[s].last_step,
+                                    self.active[s].since, s))
+        va = self.active[victim]
+        if self.ticks - va.since < self.swap_after:
+            return          # every resident is fresher than one timeslice
+        state = self.engine.offload_slot(victim)
+        self._charge("spill")
+        self.spilled[va.req.rid] = _Spilled(
+            req=va.req, generated=va.generated,
+            pending=int(self.tokens[victim]), state=state,
+            first_s=va.first_s, spilled_at=self.ticks,
+            last_step=va.last_step)
+        del self.active[victim]
+        self.free.append(victim)
+
+    def _refill_tick(self) -> None:
+        """Refill-ahead: spilled requests take freed slots before any new
+        admission — a refill resumes decode this very tick, while a fresh
+        admission still has its whole prefill in front of it."""
+        self._maybe_swap()
+        while self.free and self.spilled:
+            sp = self.spilled.pop(self._lru_waiter())
+            slot = self.free.pop()
+            self.engine.refill_slot(slot, sp.state)
+            self._charge("refill")
+            self.active[slot] = _Active(
+                req=sp.req, generated=sp.generated, first_s=sp.first_s,
+                last_step=self.ticks, since=self.ticks)
+            self.tokens[slot] = sp.pending
 
     def _decode_tick(self) -> None:
         if not self.active:
@@ -165,18 +329,22 @@ class ContinuousBatcher:
         self.tokens = nxt.copy()
         for slot in sorted(self.active):
             st = self.active[slot]
+            st.last_step = self.ticks
             st.generated.append(int(nxt[slot]))
             if len(st.generated) >= st.req.max_new_tokens:
-                self._finish(st.req, st.generated)
+                self._finish(st.req, st.generated, first_s=st.first_s)
                 self.engine.evict_slot(slot)
                 del self.active[slot]
                 self.free.append(slot)
 
     def tick(self) -> None:
-        """One scheduler step: admit, advance one prefill chunk, decode."""
+        """One scheduler step: refill spilled work into freed slots, admit,
+        advance one prefill chunk, decode."""
+        self._refill_tick()
         self._admit()
         self._prefill_tick()
         self._decode_tick()
+        self.ticks += 1
 
     # -- trace replay ------------------------------------------------------
     def run(self, requests: list[Request]) -> list[Completion]:
@@ -235,30 +403,52 @@ def run_static_trace(engine: ServeEngine, requests: list[Request],
                     toks[j, smax:smax + r.max_new_tokens].astype(np.int32)]),
                 prompt_len=len(r.prompt),
                 arrival_s=r.arrival_s, finish_s=finish,
-                finish_order=len(out)))
+                finish_order=len(out),
+                # lock-step emits the whole stream at batch completion: the
+                # first token is only observable when the batch returns
+                first_token_s=finish))
     return out
 
 
 def make_trace(n: int, *, vocab_size: int, prompt_lens=(8, 12, 20, 32),
                max_new=(4, 8, 16, 24), arrival_spacing_s: float = 0.0,
-               seed: int = 0) -> list[Request]:
+               seed: int = 0, burst: int = 1, sys_prompt_len: int = 0,
+               sys_prompt_frac: float = 0.0) -> list[Request]:
     """Mixed-length request trace: prompts/output budgets cycle through the
-    given grids out of phase, arrivals optionally staggered."""
+    given grids out of phase, arrivals optionally staggered.
+
+    ``burst`` > 1 makes arrivals bursty: requests land in groups of
+    ``burst`` sharing one arrival time, groups ``arrival_spacing_s``
+    apart.  ``sys_prompt_len``/``sys_prompt_frac`` prepend a shared
+    "system prompt" of that length to the given fraction of prompts — the
+    traffic shape prefix reuse feeds on.  Everything is keyed off
+    ``seed``, and the default arguments reproduce the old traces
+    byte-identically (the new knobs draw from their own substreams)."""
     rng = np.random.default_rng(seed)
+    burst = max(1, burst)
+    sys_prompt = None
+    pick = None
+    if sys_prompt_len > 0 and sys_prompt_frac > 0:
+        sys_prompt = np.random.default_rng(seed + 1).integers(
+            0, vocab_size, size=(sys_prompt_len,), dtype=np.int32)
+        pick = np.random.default_rng(seed + 2)
     reqs = []
     for i in range(n):
         s0 = prompt_lens[i % len(prompt_lens)]
+        prompt = rng.integers(0, vocab_size, size=(s0,), dtype=np.int32)
+        if sys_prompt is not None and pick.random() < sys_prompt_frac:
+            prompt = np.concatenate([sys_prompt, prompt])
         reqs.append(Request(
-            rid=i,
-            prompt=rng.integers(0, vocab_size, size=(s0,), dtype=np.int32),
+            rid=i, prompt=prompt,
             max_new_tokens=max_new[(i * 3 + 1) % len(max_new)],
-            arrival_s=i * arrival_spacing_s))
+            arrival_s=(i // burst) * arrival_spacing_s))
     return reqs
 
 
 def summarize(completions: list[Completion], wall_s: float) -> dict:
-    """Throughput (generated tokens only) + latency percentiles."""
+    """Throughput (generated tokens only) + latency/TTFT percentiles."""
     lats = np.asarray([c.latency_s for c in completions])
+    ttfts = np.asarray([c.ttft_s for c in completions])
     gen = sum(len(c.tokens) - c.prompt_len for c in completions)
     return {
         "requests": len(completions),
@@ -266,4 +456,6 @@ def summarize(completions: list[Completion], wall_s: float) -> dict:
         "gen_tok_s": 0.0 if wall_s <= 0 else round(gen / wall_s, 2),
         "p50_latency_s": round(float(np.percentile(lats, 50)), 4),
         "p99_latency_s": round(float(np.percentile(lats, 99)), 4),
+        "p50_ttft_s": round(float(np.percentile(ttfts, 50)), 4),
+        "p99_ttft_s": round(float(np.percentile(ttfts, 99)), 4),
     }

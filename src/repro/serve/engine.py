@@ -34,6 +34,7 @@ from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.distributed.sharding import (batch_axes, cache_shardings,
@@ -56,10 +57,23 @@ class ServeConfig:
     prefill_chunk: int = 32           # max prompt tokens per scheduler tick
     steady_interval_s: float = 0.0    # pipeline-pod steady-state interval
     #                                   (0 = single-chip plan, no pipeline)
+    oversub: float = 1.0              # admission multiplier K: virtual slots
+    #                                   per physical slot (DESIGN.md §11);
+    #                                   >1 only with a finite backing tier
+    slot_spill_s: float = 0.0         # planned one-way offload/refill time
+    #                                   for one slot's KV ring (spill_time)
+    prefix_cache_bytes: int = 0       # prefix-KV store budget in the bytes
+    #                                   left after rings (0 = store off)
 
     @property
     def slots(self) -> int:
         return self.max_slots or self.batch
+
+    @property
+    def virtual_slots(self) -> int:
+        """Requests the batcher may hold in flight: the physical slots plus
+        the spilled rings the backing tier can park (``oversub`` = K)."""
+        return max(self.slots, int(round(self.slots * self.oversub)))
 
 
 def tier_kv_capacity(cfg: ModelConfig, chip, *, batch: int,
@@ -82,14 +96,61 @@ def tier_kv_capacity(cfg: ModelConfig, chip, *, batch: int,
     tiers = chip.mem_tiers[1:]
     if not tiers or any(t.unbounded for t in tiers):
         return 0
-    budget = sum(t.capacity for t in tiers)
-    weight_bytes = cfg.param_count() * jnp.dtype(cfg.param_dtype).itemsize
-    spill = max(0, weight_bytes - chip.total_sram)
-    left = budget - min(spill, budget)
+    left = _tier_bytes_left(cfg, chip)
     hd = cfg.resolved_head_dim
     per_token = (cfg.num_layers * 2 * cfg.num_kv_heads * hd
                  * jnp.dtype(kv_dtype).itemsize)
     return int(left // max(batch * per_token, 1))
+
+
+def _tier_bytes_left(cfg: ModelConfig, chip) -> int:
+    """Off-core tier bytes left after weight placement.  ``place_tiers``
+    stages the weights that spill out of SRAM across the finite tiers
+    (staging tiers + backing store); the *aggregate* bytes they occupy are
+    placement-invariant, so the KV budget is the summed tier capacity minus
+    that spill regardless of which tier each block landed in."""
+    budget = sum(t.capacity for t in chip.mem_tiers[1:])
+    weight_bytes = cfg.param_count() * jnp.dtype(cfg.param_dtype).itemsize
+    spill = max(0, weight_bytes - chip.total_sram)
+    return budget - min(spill, budget)
+
+
+def kv_ring_bytes(cfg: ModelConfig, capacity: int,
+                  kv_dtype: str = "bfloat16") -> int:
+    """Bytes one request's spillable slot state occupies: the KV ring plus
+    ``pos``/``slot_pos`` metadata — the volume one ``offload_slot`` /
+    ``refill_slot`` moves across the tier boundary."""
+    try:
+        spec = tfm.CacheSpec(capacity=capacity, batch=1,
+                             kv_dtype=jnp.dtype(kv_dtype), per_slot=True)
+        shape = jax.eval_shape(lambda: tfm.init_cache(cfg, spec))
+        return int(sum(int(np.prod(leaf.shape)) * leaf.dtype.itemsize
+                       for leaf in jax.tree.leaves(shape)))
+    except ValueError:      # enc-dec: no per-slot serving; K/V formula only
+        hd = cfg.resolved_head_dim
+        return (capacity * cfg.num_layers * 2 * cfg.num_kv_heads * hd
+                * jnp.dtype(kv_dtype).itemsize)
+
+
+_OVERSUB_MAX = 8.0   # spill-pool backstop: at most 8 virtual slots/physical
+
+
+def tier_kv_oversub(cfg: ModelConfig, chip, *, slots: int,
+                    cache_capacity: int,
+                    kv_dtype: str = "bfloat16") -> float:
+    """Admission multiplier K for the oversubscribed batcher (DESIGN.md
+    §11): how many full KV rings the tier bytes left after weight placement
+    can hold, per physical slot.  1.0 when any backing tier is unbounded
+    (nothing forces a spill — the resident cache can simply grow) or when
+    the budget holds no more rings than the resident slots."""
+    if chip is None:
+        return 1.0
+    tiers = chip.mem_tiers[1:]
+    if not tiers or any(t.unbounded for t in tiers):
+        return 1.0
+    ring = kv_ring_bytes(cfg, cache_capacity, kv_dtype)
+    rings = _tier_bytes_left(cfg, chip) // max(ring, 1)
+    return float(max(1.0, min(rings / max(slots, 1), _OVERSUB_MAX)))
 
 
 def elk_serve_config(cfg: ModelConfig, *, batch: int, cache_capacity: int,
@@ -130,6 +191,25 @@ def elk_serve_config(cfg: ModelConfig, *, batch: int, cache_capacity: int,
     if cap > 0:
         cache_capacity = min(cache_capacity, cap)
 
+    # oversubscription (DESIGN.md §11): on an all-finite hierarchy the
+    # rings left after weight placement beyond the resident batch become
+    # virtual slots (K), each swap priced at spill_time of one ring; bytes
+    # left after *those* rings fund the prefix-KV store.  Unbounded-backed
+    # pods keep K=1 and everything below zero — value-identical to PR 8.
+    oversub = tier_kv_oversub(cfg, pod, slots=batch,
+                              cache_capacity=cache_capacity,
+                              kv_dtype=kv_dtype)
+    slot_spill_s = 0.0
+    prefix_bytes = 0
+    if oversub > 1.0:
+        from repro.core.cost_model import AnalyticCostModel
+
+        ring = kv_ring_bytes(cfg, cache_capacity, kv_dtype)
+        slot_spill_s = AnalyticCostModel(pod).spill_time(
+            ring, 0, pod.backing_tier)
+        used = int(round(batch * oversub)) * ring
+        prefix_bytes = int(max(0, _tier_bytes_left(cfg, pod) - used))
+
     knobs = pod_plan(cfg, batch=batch, seq=cache_capacity, phase="decode",
                      num_chips=num_chips, design=design,
                      mode="hybrid" if pipeline else "flat", chip=pod)
@@ -142,7 +222,9 @@ def elk_serve_config(cfg: ModelConfig, *, batch: int, cache_capacity: int,
     return ServeConfig(batch=batch, cache_capacity=cache_capacity,
                        mode="elk_stream", prefetch_depth=depth,
                        kv_dtype=kv_dtype, prefill_chunk=chunk,
-                       steady_interval_s=knobs.interval_s)
+                       steady_interval_s=knobs.interval_s,
+                       oversub=oversub, slot_spill_s=slot_spill_s,
+                       prefix_cache_bytes=prefix_bytes)
 
 
 class ServeEngine:
@@ -277,6 +359,8 @@ class ServeEngine:
         )
         self._insert = jax.jit(tfm.cache_insert_slot, donate_argnums=(0,))
         self._evict = jax.jit(tfm.cache_evict_slot, donate_argnums=(0,))
+        # extract reads the slot cache before _evict consumes it: no donate
+        self._extract = jax.jit(tfm.cache_extract_slot)
         self._req_cache0 = jax.jit(
             lambda: tfm.init_cache(cfg, self._req_spec))
         self.slot_cache = jax.jit(
@@ -315,11 +399,42 @@ class ServeEngine:
         self.slot_cache = self._insert(self.slot_cache,
                                        jnp.int32(slot), req_cache)
 
-    def evict_slot(self, slot: int) -> None:
-        """Remove a finished request: reset the slot's position and mask
-        its ring tags so the stale K/V is unreachable."""
+    def evict_slot(self, slot: int) -> dict:
+        """Remove a finished (or preempted) request: reset the slot's
+        position and mask its ring tags so the stale K/V is unreachable.
+        Returns the evicted per-request state (KV ring + ``pos``/
+        ``slot_pos``), which ``insert_slot``/``refill_slot`` round-trips
+        bit-identically — callers that only finish a request can drop it."""
         self._ensure_slots()
+        state = self._extract(self.slot_cache, jnp.int32(slot))
         self.slot_cache = self._evict(self.slot_cache, jnp.int32(slot))
+        return state
+
+    def offload_slot(self, slot: int) -> dict:
+        """Spill ``slot`` to the backing tier: evict it and hand back a
+        *host-resident copy* of its state (``np.array`` — a real copy, not
+        a view, because every engine step donates its cache buffers).  The
+        planned cost of this move is ``ServeConfig.slot_spill_s``."""
+        return jax.tree.map(lambda a: np.array(a), self.evict_slot(slot))
+
+    def refill_slot(self, slot: int, state: dict) -> None:
+        """Refill ``slot`` from an offloaded state (host or device).  Host
+        leaves are copied onto fresh device buffers first so a stored state
+        (e.g. a prefix-store snapshot) is never aliased into the donated
+        slot cache."""
+        self._ensure_slots()
+        state = jax.tree.map(lambda a: jnp.array(a), state)
+        self.slot_cache = self._insert(self.slot_cache,
+                                       jnp.int32(slot), state)
+
+    def slot_state_bytes(self) -> int:
+        """Bytes one ``offload_slot``/``refill_slot`` moves across the tier
+        boundary (one slot's KV ring + metadata)."""
+        self._ensure_slots()
+        shape = jax.eval_shape(lambda: tfm.init_cache(self.cfg,
+                                                      self._req_spec))
+        return int(sum(int(np.prod(leaf.shape)) * leaf.dtype.itemsize
+                       for leaf in jax.tree.leaves(shape)))
 
     def step(self, tokens: jax.Array) -> jax.Array:
         """One continuous-batching decode step over the mutable slot batch:

@@ -14,6 +14,9 @@ Covers the issue's acceptance criteria and satellites:
   per memory tier, as items stream in;
 * the serve engine's tier-resident KV budget: unbounded (no clamp) for
   every hbm-backed chip, finite on an all-finite hierarchy;
+* tier_kv_capacity x oversubscription (DESIGN.md §11): K > 1 only when
+  every backing tier is finite; hbm-backed and two-tier configs keep the
+  PR-8 ServeConfig values (K=1, no spill pricing, no prefix store);
 * the DSE sweep: the stacked-DRAM design point strictly improves opt_30b
   decode with the simulator agreeing within 2x.
 """
@@ -330,6 +333,67 @@ class TestServeKV:
         sc = elk_serve_config(cfg, batch=2, cache_capacity=256,
                               num_chips=1, pod=chip)
         assert sc.cache_capacity == 64
+
+
+class TestServeKVOversub:
+    """tier_kv_capacity x oversubscription (DESIGN.md §11): the admission
+    multiplier K is funded by the same tier bytes the KV clamp reads, and
+    every PR-8 config keeps the new ServeConfig fields at their no-op
+    defaults."""
+
+    def test_k_above_one_only_on_finite_hierarchy(self):
+        from repro.serve.engine import _OVERSUB_MAX, tier_kv_oversub
+
+        cfg = get_config("opt_30b")
+        chip = ipu_mk2().with_stacked_dram(128 * GB)
+        k = tier_kv_oversub(cfg, chip, slots=4, cache_capacity=2048)
+        assert 1.0 < k <= _OVERSUB_MAX
+        # fewer tier bytes can never fund more rings
+        small = ipu_mk2().with_stacked_dram(80 * GB)
+        assert tier_kv_oversub(cfg, small, slots=4,
+                               cache_capacity=2048) <= k
+        # unbounded-backed pods never oversubscribe: the resident cache
+        # can simply grow, nothing forces a spill
+        for pod in (CHIP, CHIP.with_stacked_dram(), None):
+            assert tier_kv_oversub(cfg, pod, slots=4,
+                                   cache_capacity=2048) == 1.0
+
+    def test_exact_ring_arithmetic(self):
+        from repro.serve.engine import kv_ring_bytes, tier_kv_oversub
+
+        cfg = smoke("whisper_tiny")
+        ring = kv_ring_bytes(cfg, 64)
+        # room for exactly 10 rings beyond the (zero-spill) tiny weights
+        chip = ipu_mk2().with_stacked_dram(10 * ring)
+        assert tier_kv_oversub(cfg, chip, slots=2,
+                               cache_capacity=64) == pytest.approx(5.0)
+
+    def test_serve_config_unbounded_keeps_pr8_values(self):
+        from repro.serve.engine import elk_serve_config
+
+        sc = elk_serve_config(tiny_cfg(), batch=2, cache_capacity=128,
+                              num_chips=4, pod=CHIP)
+        assert (sc.oversub, sc.slot_spill_s, sc.prefix_cache_bytes) == \
+            (1.0, 0.0, 0)
+        assert sc.virtual_slots == sc.slots
+
+    def test_serve_config_funds_k_and_prefix_store(self):
+        from repro.serve.engine import elk_serve_config
+
+        cfg = smoke("whisper_tiny")
+        hd = cfg.resolved_head_dim
+        per_token = cfg.num_layers * 2 * cfg.num_kv_heads * hd * 2
+        # 1100 token-equivalents of tier bytes: capacity clamp stays above
+        # the requested 256, four 256-token rings fit (K = 2 over batch=2)
+        # and the 76-token remainder funds the prefix store
+        chip = ipu_mk2().with_stacked_dram(1100 * per_token)
+        sc = elk_serve_config(cfg, batch=2, cache_capacity=256,
+                              num_chips=1, pod=chip)
+        assert sc.cache_capacity == 256
+        assert sc.oversub == pytest.approx(2.0)
+        assert sc.virtual_slots == 4
+        assert sc.slot_spill_s > 0.0
+        assert sc.prefix_cache_bytes == 76 * per_token
 
 
 # ---------------------------------------------------------------------------
