@@ -518,6 +518,123 @@ def bench_memtier(quick: bool = False) -> None:
         raise RuntimeError("; ".join(bad))
 
 
+def bench_fleet(quick: bool = False) -> None:
+    """Fleet-tier serving (DESIGN.md §12) -> BENCH_fleet.json.
+
+    Everything runs on the fleet's virtual clock, so the numbers are
+    deterministic scheduling deltas (CI-stable), not host wall time.
+    Gates three contracts, CI-enforced by the ``fleet-smoke`` job:
+
+    * degenerate equivalence — a FleetRouter over one mixed pod produces
+      the same completions and the same summary as driving the
+      ContinuousBatcher directly on the same virtual clock;
+    * disaggregation wins — on a long-prefill/short-decode burst, a
+      2-prefill + 2-decode fleet strictly beats 4 mixed replicas on
+      generated tok/s AND p99 TTFT (the chunk-budget asymmetry
+      ``elk_serve_config`` role sizing buys, minus the migrations it
+      costs);
+    * migration is charged — the router's planned migration time is
+      within 2x of ``simulate_fleet_traffic`` re-serving the same event
+      list on serial per-tier servers.
+    """
+    import jax
+    import numpy as np
+
+    from repro.chip.config import ipu_pod4_hbm
+    from repro.chip.dse import fleet_sweep
+    from repro.chip.simulator import simulate_fleet_traffic
+    from repro.chip.topology import fleet_spec
+    from repro.configs import get_smoke_config
+    from repro.launch.mesh import make_local_mesh
+    from repro.models import transformer as tfm
+    from repro.serve.batcher import ContinuousBatcher, make_trace, summarize
+    from repro.serve.engine import ServeConfig, ServeEngine
+    from repro.serve.fleet import (FleetPod, FleetRouter, PodCosts,
+                                   VirtualClock, run_virtual_trace)
+
+    n = 12 if quick else 16
+    cfg = get_smoke_config("qwen3_14b")
+    mesh = make_local_mesh()
+    params = tfm.init_params(jax.random.PRNGKey(0), cfg)
+    costs = PodCosts(decode_step_s=1e-3, tick_overhead_s=5e-4)
+
+    def engine(chunk):
+        return ServeEngine(cfg, mesh, params, ServeConfig(
+            batch=4, cache_capacity=128, prefill_chunk=chunk))
+
+    def trace():
+        # long prefill, short decode: the traffic disaggregation feeds on
+        return make_trace(n, vocab_size=cfg.vocab_size,
+                          prompt_lens=(64, 96, 80, 64),
+                          max_new=(4, 8, 6, 8))
+
+    bad = []
+    out: dict = {"arch": "qwen3_14b (smoke)", "requests": n, "pods": 4}
+
+    # -- gate 1: one-mixed-pod fleet == direct batcher -------------------
+    fr1 = FleetRouter([FleetPod(engine(16), "mixed", costs=costs)])
+    got = fr1.run(trace())
+    vc = VirtualClock()
+    ref = run_virtual_trace(ContinuousBatcher(engine(16), vc), trace(),
+                            costs)
+    direct = summarize(ref, vc.t)
+    same = (len(got) == len(ref)
+            and all(a.rid == b.rid and np.array_equal(a.tokens, b.tokens)
+                    and abs(a.finish_s - b.finish_s) < 1e-9
+                    for a, b in zip(got, ref))
+            and all(fr1.summary()[k] == v for k, v in direct.items()))
+    out["single_pod_equivalent"] = bool(same)
+    print(f"  1-pod fleet == direct batcher: {'OK' if same else 'BROKEN'}")
+    if not same:
+        bad.append("one-mixed-pod fleet is not value-identical to the "
+                   "direct ContinuousBatcher")
+
+    # -- gate 2: disaggregation beats mixed replicas ---------------------
+    fl = fleet_spec(ipu_pod4_hbm(), 4)
+
+    def run_fleet(roles, fleet=None):
+        pods = [FleetPod(engine(128 if r == "prefill" else 16), r,
+                         costs=costs) for r in roles]
+        router = FleetRouter(pods, fleet=fleet)
+        router.run(trace())
+        return router
+
+    mixed = run_fleet(["mixed"] * 4)
+    disagg = run_fleet(["prefill", "prefill", "decode", "decode"],
+                       fleet=fl)
+    ms, ds = mixed.summary(), disagg.summary()
+    out["mixed"], out["disagg"] = ms, ds
+    print(f"  mixed x4   gen={ms['gen_tok_s']:8.1f} tok/s "
+          f"p99_ttft={ms['p99_ttft_s'] * 1e3:6.1f}ms")
+    print(f"  disagg 2+2 gen={ds['gen_tok_s']:8.1f} tok/s "
+          f"p99_ttft={ds['p99_ttft_s'] * 1e3:6.1f}ms "
+          f"({ds['migrations']} migrations, "
+          f"{ds['planned_migration_s'] * 1e3:.3f}ms planned)")
+    if not (ds["gen_tok_s"] > ms["gen_tok_s"]
+            and ds["p99_ttft_s"] < ms["p99_ttft_s"]):
+        bad.append(f"disaggregation does not strictly beat mixed "
+                   f"replicas (gen {ds['gen_tok_s']} vs "
+                   f"{ms['gen_tok_s']}, p99 ttft {ds['p99_ttft_s']} vs "
+                   f"{ms['p99_ttft_s']})")
+
+    # -- gate 3: migration charged, sim within 2x of plan ----------------
+    res = simulate_fleet_traffic(fl, disagg.migration_events)
+    sim = sum(f - at for f, (_, at, _, _) in
+              zip(res.finish, disagg.migration_events))
+    ratio = sim / max(disagg.planned_migration_s, 1e-12)
+    out["migration_sim_plan_ratio"] = round(ratio, 4)
+    print(f"  migration sim/plan ratio: {ratio:.3f}")
+    if disagg.planned_migration_s <= 0:
+        bad.append("fleet-priced migrations were free")
+    if not 0.5 <= ratio <= 2.0:
+        bad.append(f"migration sim/plan ratio {ratio:.3f} outside 2x")
+
+    out["sweep"] = fleet_sweep(smoke=True, prompt_len=1024)
+    _write_json("BENCH_fleet.json", out)
+    if bad:
+        raise RuntimeError("; ".join(bad))
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--quick", "--fast", action="store_true", dest="quick",
@@ -544,6 +661,7 @@ def main(argv=None) -> None:
         ("bench_fusion", lambda: bench_fusion(quick)),
         ("bench_hybrid", lambda: bench_hybrid(quick)),
         ("bench_memtier", lambda: bench_memtier(quick)),
+        ("bench_fleet", lambda: bench_fleet(quick)),
         ("fig_fusion", paper_figs.fig_fusion),
         ("fig12_costmodel", paper_figs.fig12_costmodel),
         ("fig16_compile_time", paper_figs.fig16_compile_time),
@@ -563,7 +681,8 @@ def main(argv=None) -> None:
     if args.section:
         aliases = {"compile": "bench_compile", "serve": "bench_serve",
                    "pipeline": "bench_pipeline", "fusion": "bench_fusion",
-                   "hybrid": "bench_hybrid", "memtier": "bench_memtier"}
+                   "hybrid": "bench_hybrid", "memtier": "bench_memtier",
+                   "fleet": "bench_fleet"}
         wanted = {aliases.get(s, s) for s in args.section}
         known = {name for name, _ in sections}
         unknown = wanted - known
@@ -574,6 +693,7 @@ def main(argv=None) -> None:
     elif quick:
         keep = {"bench_compile", "bench_serve", "bench_pipeline",
                 "bench_fusion", "bench_hybrid", "bench_memtier",
+                "bench_fleet",
                 "fig12_costmodel",
                 "fig18_breakdown", "fig24_topology", "validate_paper",
                 "roofline_table"}

@@ -326,3 +326,64 @@ def kv_offload_sweep(model: str = "opt_30b", *,
             "slot_spill_us": round(spill * 1e6, 3),
         })
     return rows
+
+
+def fleet_sweep(model: str = "opt_30b", *,
+                num_pods: int = 4,
+                n_prefill_list: Sequence[int] = (1, 2),
+                inter_bw_ratios: Sequence[float] = (0.25, 0.0625),
+                slots: int = 4, cache_capacity: int = 2048,
+                prompt_len: int = 1024, kv_dtype: str = "bfloat16",
+                decode_step_s: float = 1e-3,
+                smoke: bool = False) -> list[dict]:
+    """Fleet disaggregation sweep (DESIGN.md §12): for each prefill/decode
+    split of a ``num_pods`` fleet and each inter-pod fabric dilution, the
+    predicted steady decode rate and prefill service rate of the split vs
+    the same pods run as mixed replicas (``serve.fleet.
+    predict_fleet_rates`` under the PodCosts tick pricing), and what one
+    KV-ring migration costs over that fabric (``FleetSpec.
+    migration_time``) against the decode work it unlocks.  A split "wins"
+    when it beats the mixed baseline on prefill service rate without
+    giving up generated-token rate — the router only disaggregates when
+    this row says so."""
+    from repro.chip.config import ipu_pod4_hbm
+    from repro.chip.topology import fleet_spec
+    from repro.configs import get_config, get_smoke_config
+    from repro.serve.engine import PREFILL_SAT, kv_ring_bytes
+    from repro.serve.fleet import PodCosts, predict_fleet_rates
+
+    cfg = get_smoke_config(model) if smoke else get_config(model)
+    pod = ipu_pod4_hbm()
+    ring = kv_ring_bytes(cfg, cache_capacity, kv_dtype)
+    costs = PodCosts(decode_step_s=decode_step_s,
+                     tick_overhead_s=0.5 * decode_step_s)
+    rows = []
+    for ratio in inter_bw_ratios:
+        fl = dataclasses.replace(fleet_spec(pod, num_pods),
+                                 inter_pod_bw=0.0, inter_bw_ratio=ratio)
+        mig = fl.migration_time(ring, 0, num_pods - 1)
+        for n_pf in n_prefill_list:
+            if not 0 < n_pf < num_pods:
+                continue
+            r = predict_fleet_rates(
+                costs, num_pods=num_pods, n_prefill=n_pf, slots=slots,
+                prompt_len=prompt_len, chunk_prefill=PREFILL_SAT)
+            # migration overhead per request, amortized over its decode
+            # stream on the split's decode pods
+            rows.append({
+                "model": cfg.name, "num_pods": num_pods,
+                "n_prefill": n_pf, "slots": slots,
+                "prompt_len": prompt_len,
+                "inter_bw_ratio": ratio,
+                "ring_mb": round(ring / 1e6, 3),
+                "migration_ms": round(mig * 1e3, 4),
+                "mixed_gen_tok_s": round(r["mixed_gen_tok_s"], 1),
+                "disagg_gen_tok_s": round(r["disagg_gen_tok_s"], 1),
+                "mixed_prefill_req_s": round(r["mixed_prefill_req_s"], 2),
+                "disagg_prefill_req_s":
+                    round(r["disagg_prefill_req_s"], 2),
+                "disagg_won": bool(
+                    r["disagg_prefill_req_s"] > r["mixed_prefill_req_s"]
+                    and r["disagg_gen_tok_s"] >= r["mixed_gen_tok_s"]),
+            })
+    return rows

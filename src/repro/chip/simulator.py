@@ -538,3 +538,42 @@ def simulate_kv_traffic(chip: ChipConfig, events, *, src: int = 0,
         finish.append(end)
     return KVTrafficResult(total_time=max(finish, default=0.0), busy=busy,
                            finish=finish)
+
+
+def simulate_fleet_traffic(fleet, events) -> KVTrafficResult:
+    """Re-serve a fleet router's KV migrations (DESIGN.md §12) on serial
+    servers, one tier further up than :func:`simulate_kv_traffic`.
+
+    ``events`` is ``FleetRouter.migration_events``-shaped: ``(nbytes, at,
+    src_pod, dst_pod)`` per migration.  Each migration is three chained
+    legs — offload on the source pod's backing tier, the inter-pod wire,
+    refill on the destination pod's backing tier — priced exactly as the
+    plan's ``FleetSpec.migration_time`` (same ``spill_time`` +
+    ``transfer_time`` vocabulary), with the simulator adding only the
+    serialization shared resources impose: one transfer at a time per pod
+    backing tier (§4.5 rule 2 again) and one at a time on the fleet link.
+    ``busy`` keys are ``("pod", i)`` for pod ``i``'s backing tier and
+    ``"fleet"`` for the inter-pod link."""
+    from repro.core.cost_model import AnalyticCostModel
+
+    cms = [AnalyticCostModel(p) for p in fleet.pods]
+    free: dict = {}
+    busy: dict = {}
+    finish = []
+    for nbytes, at, src, dst in events:
+        off = cms[src].spill_time(nbytes, 0, fleet.pods[src].backing_tier)
+        wire = fleet.transfer_time(nbytes)
+        ref = cms[dst].spill_time(nbytes, 0, fleet.pods[dst].backing_tier)
+        t0 = max(float(at), free.get(("pod", src), 0.0))
+        t1 = max(t0 + off, free.get("fleet", 0.0))
+        t2 = max(t1 + wire, free.get(("pod", dst), 0.0))
+        end = t2 + ref
+        free[("pod", src)] = t0 + off
+        free["fleet"] = t1 + wire
+        free[("pod", dst)] = end
+        busy[("pod", src)] = busy.get(("pod", src), 0.0) + off
+        busy["fleet"] = busy.get("fleet", 0.0) + wire
+        busy[("pod", dst)] = busy.get(("pod", dst), 0.0) + ref
+        finish.append(end)
+    return KVTrafficResult(total_time=max(finish, default=0.0), busy=busy,
+                           finish=finish)

@@ -481,6 +481,90 @@ class HierPodTopology(TopologyModel):
                                        self.frac_rot_inter)
 
 
+@dataclasses.dataclass(frozen=True)
+class FleetSpec:
+    """A fleet of pods behind one router (DESIGN.md §12): per-pod
+    ``ChipConfig``s plus the inter-pod tier a KV migration crosses.
+
+    This extends the tiering pattern one level up, the way ``hier_pod``
+    already stacks a slower ``inter`` gateway tier on top of each chip's
+    ``intra`` links: the fleet adds a ``pod`` link class — datacenter
+    fabric between pods — that is again thinner (``inter_bw_ratio`` of the
+    slowest pod's bisection when not given explicitly) and again
+    higher-latency (two pod-gateway hops on top of a fabric hop).  A
+    prefill->decode migration's wire leg is priced here; the endpoint
+    offload/refill legs are priced by each pod's own
+    ``AnalyticCostModel.spill_time``, and ``chip.simulator.
+    simulate_fleet_traffic`` re-serves all three legs on serial servers.
+    """
+    pods: tuple["ChipConfig", ...]
+    inter_pod_bw: float = 0.0        # bytes/s one pod-pair boundary
+    #                                  sustains (0 = derive from the pods)
+    inter_pod_latency: float = 0.0   # per-transfer latency across the
+    #                                  fleet tier (0 = derive)
+    inter_bw_ratio: float = 0.25     # dilution vs the slowest pod's
+    #                                  bisection when deriving
+
+    def __post_init__(self):
+        if not self.pods:
+            raise ValueError("FleetSpec needs at least one pod")
+        if self.inter_pod_bw <= 0:
+            object.__setattr__(
+                self, "inter_pod_bw",
+                self.inter_bw_ratio
+                * min(p.topo.bisection_bw for p in self.pods))
+        if self.inter_pod_latency <= 0:
+            # two pod-gateway crossings around one fabric hop, one tier
+            # slower again than hier_pod's 4x-link-latency gateway
+            object.__setattr__(
+                self, "inter_pod_latency",
+                8.0 * max(p.link_latency for p in self.pods))
+
+    @property
+    def num_pods(self) -> int:
+        return len(self.pods)
+
+    def link(self) -> LinkClass:
+        """The fleet tier as a link class, same vocabulary as the intra
+        and inter tiers below it."""
+        return LinkClass("pod", self.inter_pod_bw, self.inter_pod_latency)
+
+    def transfer_time(self, nbytes: float) -> float:
+        """Wire time of one inter-pod transfer (the migration's middle
+        leg): volume over the pod-pair boundary plus the fleet latency."""
+        if nbytes <= 0:
+            return 0.0
+        return nbytes / self.inter_pod_bw + self.inter_pod_latency
+
+    def migration_time(self, nbytes: float, src: int, dst: int) -> float:
+        """Planned end-to-end cost of moving one KV ring from pod ``src``
+        to pod ``dst``: offload off src's cores, the inter-pod wire, and
+        the refill onto dst's cores — three serial legs, each priced by
+        the tier it crosses."""
+        from repro.core.cost_model import AnalyticCostModel
+
+        a, b = self.pods[src], self.pods[dst]
+        return (AnalyticCostModel(a).spill_time(nbytes, 0, a.backing_tier)
+                + self.transfer_time(nbytes)
+                + AnalyticCostModel(b).spill_time(nbytes, 0, b.backing_tier))
+
+    def signature(self) -> tuple:
+        """Hashable identity, fleet tier included — the same role
+        ``TopologyModel.signature()`` plays in plan cache keys."""
+        return (("fleet", self.inter_pod_bw, self.inter_pod_latency)
+                + tuple(p.topo.signature() for p in self.pods))
+
+
+def fleet_spec(pod: "ChipConfig", num_pods: int, *,
+               inter_pod_bw: float = 0.0,
+               inter_pod_latency: float = 0.0) -> FleetSpec:
+    """Homogeneous fleet: ``num_pods`` copies of one pod config."""
+    if num_pods < 1:
+        raise ValueError(f"num_pods must be >= 1, got {num_pods}")
+    return FleetSpec(pods=(pod,) * num_pods, inter_pod_bw=inter_pod_bw,
+                     inter_pod_latency=inter_pod_latency)
+
+
 TOPOLOGIES: dict[str, type[TopologyModel]] = {
     cls.kind: cls for cls in (All2AllTopology, Mesh2DTopology,
                               Torus2DTopology, RingTopology,

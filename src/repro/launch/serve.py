@@ -65,7 +65,49 @@ def _run_trace(eng: ServeEngine, args, vocab: int) -> dict:
         static = run_static_trace(eng, trace)
         stats["static"] = summarize(static, time.perf_counter() - t0)
         print(f"static:     {stats['static']}")
+
+    if args.fleet > 0:
+        stats["fleet"] = _run_fleet(eng, args, vocab)
+        print(f"fleet:      {stats['fleet']}")
     return stats
+
+
+def _run_fleet(eng: ServeEngine, args, vocab: int) -> dict:
+    """Serve the same trace on an ``--fleet N`` pod fleet over the virtual
+    clock (deterministic scheduling deltas, not wall time): N mixed
+    replicas by default, or ``--disagg`` 1 prefill + N-1 decode pods with
+    router-priced migrations; ``--ttft-slo-ms`` arms shedding."""
+    import dataclasses
+
+    from repro.serve.batcher import make_trace
+    from repro.serve.engine import PREFILL_SAT
+    from repro.serve.fleet import FleetPod, FleetRouter, PodCosts
+
+    def pod(role):
+        # mirror elk_serve_config's role sizing on the launcher's scfg
+        chunk = eng.scfg.prefill_chunk
+        if role == "prefill":
+            chunk = min(PREFILL_SAT, eng.scfg.cache_capacity)
+        elif role == "decode":
+            chunk = min(16, eng.scfg.cache_capacity)
+        scfg = dataclasses.replace(eng.scfg, prefill_chunk=chunk)
+        return FleetPod(ServeEngine(eng.cfg, eng.mesh, eng.params, scfg),
+                        role, costs=PodCosts.from_serve_config(scfg))
+
+    roles = (["prefill"] + ["decode"] * (args.fleet - 1)
+             if args.disagg and args.fleet > 1
+             else ["mixed"] * args.fleet)
+    router = FleetRouter([pod(r) for r in roles],
+                         ttft_slo_s=args.ttft_slo_ms * 1e-3)
+    router.run(make_trace(args.trace, vocab_size=vocab,
+                          arrival_spacing_s=args.arrival_spacing,
+                          seed=args.trace_seed, burst=args.burst,
+                          sys_prompt_len=args.sys_prompt_len,
+                          sys_prompt_frac=args.sys_prompt_frac))
+    out = router.summary()
+    out["disagg"] = bool(args.disagg and args.fleet > 1)
+    out["ttft_slo_ms"] = args.ttft_slo_ms
+    return out
 
 
 def main() -> None:
@@ -117,6 +159,17 @@ def main() -> None:
     ap.add_argument("--compare-static", action="store_true",
                     help="also run the static-batching baseline on the "
                          "same trace")
+    ap.add_argument("--fleet", type=int, default=0, metavar="N",
+                    help="also serve the trace on an N-pod fleet behind "
+                         "the SLO-aware router, ticked on the virtual "
+                         "clock (DESIGN.md §12)")
+    ap.add_argument("--disagg", action="store_true",
+                    help="disaggregate the --fleet pods: 1 prefill pod + "
+                         "N-1 decode pods with router-priced KV "
+                         "migrations (default: N mixed replicas)")
+    ap.add_argument("--ttft-slo-ms", type=float, default=0.0,
+                    help="shed fleet requests whose predicted TTFT "
+                         "exceeds this target (0 = admit everything)")
     ap.add_argument("--json-out", default="",
                     help="write --trace stats to this JSON file")
     args = ap.parse_args()

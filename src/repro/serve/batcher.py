@@ -57,6 +57,8 @@ class Request:
     prompt: np.ndarray            # (S0,) int32 token ids
     max_new_tokens: int
     arrival_s: float = 0.0        # offset from trace start
+    tenant: int = 0               # multi-tenant traces: which arrival
+    #                               stream this request came from
 
 
 @dataclasses.dataclass
@@ -69,6 +71,8 @@ class Completion:
     finish_order: int
     first_token_s: float = -1.0   # when the first new token appeared
     #                               (-1: degenerate request, no token)
+    admitted_s: float = -1.0      # when the request left the queue and
+    #                               its prefill began (-1: unknown)
 
     @property
     def latency_s(self) -> float:
@@ -81,6 +85,14 @@ class Completion:
         if self.first_token_s < 0:
             return self.latency_s
         return self.first_token_s - self.arrival_s
+
+    @property
+    def queue_wait_s(self) -> float:
+        """Seconds spent queued before admission — the signal a fleet
+        router balances across pods (DESIGN.md §12)."""
+        if self.admitted_s < 0:
+            return 0.0
+        return max(self.admitted_s - self.arrival_s, 0.0)
 
 
 @dataclasses.dataclass
@@ -134,7 +146,8 @@ class ContinuousBatcher:
     def __init__(self, engine: ServeEngine,
                  clock: Callable[[], float] = time.perf_counter, *,
                  oversub: Optional[float] = None,
-                 prefix_store=None, swap_after: int = 4):
+                 prefix_store=None, swap_after: int = 4,
+                 handoff: Optional[Callable] = None):
         self.engine = engine
         self.slots = engine.scfg.slots
         # admission budget: the ELK-sized prefill chunk (gather-ahead window
@@ -157,6 +170,10 @@ class ContinuousBatcher:
             from repro.serve.prefix import PrefixStore
             prefix_store = PrefixStore(engine.scfg.prefix_cache_bytes)
         self.prefix = prefix_store
+        # fleet migration hook (DESIGN.md §12): when set, a request that
+        # finishes prefill is handed off — host state + first token — to
+        # the router instead of decoding here (prefill-role pods)
+        self.handoff = handoff
         self.clock = clock
         self.queue: deque[Request] = deque()
         self.prefilling: Optional[_Prefill] = None
@@ -171,6 +188,11 @@ class ContinuousBatcher:
         self.prefix_hits = 0
         self.prefix_tokens_saved = 0
         self._ring_bytes = 0
+        self._admitted: dict[int, float] = {}   # rid -> admission time
+        # per-tick work counters, read by the fleet's virtual clock to
+        # price the tick (reset at the top of every tick)
+        self.tick_prefill_tokens = 0
+        self.tick_decoded = False
         self.t0 = self.clock()
 
     # -- scheduling --------------------------------------------------------
@@ -195,7 +217,8 @@ class ContinuousBatcher:
         self.completed.append(Completion(
             rid=req.rid, tokens=toks, prompt_len=len(req.prompt),
             arrival_s=req.arrival_s, finish_s=self._now(),
-            finish_order=len(self.completed), first_token_s=first_s))
+            finish_order=len(self.completed), first_token_s=first_s,
+            admitted_s=self._admitted.pop(req.rid, -1.0)))
 
     def _charge(self, kind: str) -> None:
         """Record one ring move across the tier boundary, accumulating the
@@ -207,7 +230,9 @@ class ContinuousBatcher:
 
     def _admit(self) -> None:
         while self.queue and self.queue[0].max_new_tokens <= 0:
-            self._finish(self.queue.popleft(), [])
+            req = self.queue.popleft()
+            self._admitted[req.rid] = self._now()
+            self._finish(req, [])
         if self.prefilling is not None or not self.queue:
             return
         inflight = len(self.active) + len(self.spilled)
@@ -218,6 +243,7 @@ class ContinuousBatcher:
         else:
             return
         req = self.queue.popleft()
+        self._admitted[req.rid] = self._now()
         cache, off = self.engine.new_request_cache(), 0
         if self.prefix is not None:
             hit = self.prefix.lookup(
@@ -242,6 +268,7 @@ class ContinuousBatcher:
             ps.req.prompt[None, ps.off:ps.off + t], jnp.int32)
         tok, ps.cache = self.engine.prefill_chunk(ps.cache, chunk)
         ps.off += t
+        self.tick_prefill_tokens = t
         if ps.off < len(ps.req.prompt):
             # snapshot at the chunk boundary: a strict in-capacity prefix
             # whose ring has never wrapped — the prefix store's unit of
@@ -258,6 +285,16 @@ class ContinuousBatcher:
             self._finish(ps.req, [first], first_s=now)
             if ps.slot >= 0:
                 self.free.append(ps.slot)
+        elif self.handoff is not None:
+            # prefill-role pod (DESIGN.md §12): the finished prefill leaves
+            # for a decode pod — host-copy the ring (one charged offload)
+            # and let the router price the inter-pod leg
+            state = jax.tree.map(lambda a: np.array(a), ps.cache)
+            self._charge("spill")
+            if ps.slot >= 0:
+                self.free.append(ps.slot)
+            self.handoff(ps.req, state, [first], now,
+                         self._admitted.pop(ps.req.rid, -1.0))
         elif ps.slot >= 0:
             self.engine.insert_slot(ps.slot, ps.cache)
             self.active[ps.slot] = _Active(
@@ -325,6 +362,7 @@ class ContinuousBatcher:
     def _decode_tick(self) -> None:
         if not self.active:
             return
+        self.tick_decoded = True
         nxt = np.asarray(self.engine.step(jnp.asarray(self.tokens)))
         self.tokens = nxt.copy()
         for slot in sorted(self.active):
@@ -340,11 +378,32 @@ class ContinuousBatcher:
     def tick(self) -> None:
         """One scheduler step: refill spilled work into freed slots, admit,
         advance one prefill chunk, decode."""
+        self.tick_prefill_tokens = 0
+        self.tick_decoded = False
         self._refill_tick()
         self._admit()
         self._prefill_tick()
         self._decode_tick()
         self.ticks += 1
+
+    def adopt(self, req: Request, state: dict, generated: list,
+              first_s: float, *, admitted_s: float = -1.0) -> None:
+        """Take over a request mid-stream (fleet migration, DESIGN.md §12).
+
+        ``state`` is a host-resident slot state — the other pod's
+        ``handoff`` payload or an ``offload_slot`` result — which parks on
+        this pod's backing tier and is slotted by the ordinary refill-ahead
+        path (the refill move is charged there; the offload was charged
+        where the state came from).  ``generated`` must hold at least the
+        prefill's first token: its last entry is the next token to feed."""
+        if not generated:
+            raise ValueError(f"request {req.rid}: nothing generated yet — "
+                             "adopt() resumes a stream, prefill seeds it")
+        self._admitted[req.rid] = admitted_s
+        self.spilled[req.rid] = _Spilled(
+            req=req, generated=list(generated),
+            pending=int(generated[-1]), state=state, first_s=first_s,
+            spilled_at=self.ticks, last_step=self.ticks)
 
     # -- trace replay ------------------------------------------------------
     def run(self, requests: list[Request]) -> list[Completion]:
@@ -413,7 +472,9 @@ def run_static_trace(engine: ServeEngine, requests: list[Request],
 def make_trace(n: int, *, vocab_size: int, prompt_lens=(8, 12, 20, 32),
                max_new=(4, 8, 16, 24), arrival_spacing_s: float = 0.0,
                seed: int = 0, burst: int = 1, sys_prompt_len: int = 0,
-               sys_prompt_frac: float = 0.0) -> list[Request]:
+               sys_prompt_frac: float = 0.0, tenant_rates=(),
+               tail_frac: float = 0.0,
+               tail_mult: float = 4.0) -> list[Request]:
     """Mixed-length request trace: prompts/output budgets cycle through the
     given grids out of phase, arrivals optionally staggered.
 
@@ -421,9 +482,19 @@ def make_trace(n: int, *, vocab_size: int, prompt_lens=(8, 12, 20, 32),
     ``burst`` sharing one arrival time, groups ``arrival_spacing_s``
     apart.  ``sys_prompt_len``/``sys_prompt_frac`` prepend a shared
     "system prompt" of that length to the given fraction of prompts — the
-    traffic shape prefix reuse feeds on.  Everything is keyed off
-    ``seed``, and the default arguments reproduce the old traces
-    byte-identically (the new knobs draw from their own substreams)."""
+    traffic shape prefix reuse feeds on.
+
+    Multi-tenant knobs (DESIGN.md §12): ``tenant_rates`` is a tuple of
+    relative arrival rates — each request is labeled with a tenant drawn
+    proportionally to its rate and arrivals become a merged Poisson
+    process with mean inter-arrival ``arrival_spacing_s`` (the merge of
+    per-tenant Poisson streams *is* one Poisson stream whose tenant labels
+    follow the rate shares, so this models K tenants exactly).
+    ``tail_frac`` makes prompt lengths heavy-tailed: that fraction of
+    requests stretch their grid length by a Pareto(2) factor, capped at
+    ``tail_mult``x.  Everything is keyed off ``seed``, and the default
+    arguments reproduce the old traces byte-identically (every new knob
+    draws from its own substream)."""
     rng = np.random.default_rng(seed)
     burst = max(1, burst)
     sys_prompt = None
@@ -432,24 +503,47 @@ def make_trace(n: int, *, vocab_size: int, prompt_lens=(8, 12, 20, 32),
         sys_prompt = np.random.default_rng(seed + 1).integers(
             0, vocab_size, size=(sys_prompt_len,), dtype=np.int32)
         pick = np.random.default_rng(seed + 2)
+    tenants = arrivals = None
+    if len(tenant_rates) > 0:
+        rates = np.asarray(tenant_rates, float)
+        if rates.min() <= 0:
+            raise ValueError(f"tenant_rates must be positive: {tenant_rates}")
+        trng = np.random.default_rng(seed + 3)
+        tenants = trng.choice(len(rates), size=n, p=rates / rates.sum())
+        arrivals = np.cumsum(trng.exponential(
+            scale=max(arrival_spacing_s, 0.0), size=n))
+    tail = np.random.default_rng(seed + 4) if tail_frac > 0 else None
     reqs = []
     for i in range(n):
         s0 = prompt_lens[i % len(prompt_lens)]
+        if tail is not None and tail.random() < tail_frac:
+            s0 = min(int(s0 * (1.0 + tail.pareto(2.0))),
+                     int(s0 * max(tail_mult, 1.0)))
         prompt = rng.integers(0, vocab_size, size=(s0,), dtype=np.int32)
         if sys_prompt is not None and pick.random() < sys_prompt_frac:
             prompt = np.concatenate([sys_prompt, prompt])
         reqs.append(Request(
             rid=i, prompt=prompt,
             max_new_tokens=max_new[(i * 3 + 1) % len(max_new)],
-            arrival_s=(i // burst) * arrival_spacing_s))
+            arrival_s=(float(arrivals[i]) if arrivals is not None
+                       else (i // burst) * arrival_spacing_s),
+            tenant=int(tenants[i]) if tenants is not None else 0))
     return reqs
 
 
 def summarize(completions: list[Completion], wall_s: float) -> dict:
-    """Throughput (generated tokens only) + latency/TTFT percentiles."""
+    """Throughput (generated tokens only) + latency/TTFT percentiles, plus
+    the per-phase signals a fleet router needs (DESIGN.md §12): queue-wait
+    percentiles and the steady decode token rate over the span between the
+    first token anywhere and the last finish.  New keys only — existing
+    consumers of the bench JSON see the same keys as before."""
     lats = np.asarray([c.latency_s for c in completions])
     ttfts = np.asarray([c.ttft_s for c in completions])
+    waits = np.asarray([c.queue_wait_s for c in completions])
     gen = sum(len(c.tokens) - c.prompt_len for c in completions)
+    firsts = [c.first_token_s for c in completions if c.first_token_s >= 0]
+    span = (max(c.finish_s for c in completions) - min(firsts)) \
+        if firsts else 0.0
     return {
         "requests": len(completions),
         "wall_s": round(wall_s, 4),
@@ -458,4 +552,8 @@ def summarize(completions: list[Completion], wall_s: float) -> dict:
         "p99_latency_s": round(float(np.percentile(lats, 99)), 4),
         "p50_ttft_s": round(float(np.percentile(ttfts, 50)), 4),
         "p99_ttft_s": round(float(np.percentile(ttfts, 99)), 4),
+        "p50_queue_wait_s": round(float(np.percentile(waits, 50)), 4),
+        "p99_queue_wait_s": round(float(np.percentile(waits, 99)), 4),
+        "decode_tok_s": round(gen / span, 2) if span > 0 else (
+            0.0 if wall_s <= 0 else round(gen / wall_s, 2)),
     }

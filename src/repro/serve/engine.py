@@ -153,10 +153,15 @@ def tier_kv_oversub(cfg: ModelConfig, chip, *, slots: int,
     return float(max(1.0, min(rings / max(slots, 1), _OVERSUB_MAX)))
 
 
+PREFILL_SAT = 128   # prompt tokens one weight pass saturates: the chunk
+#                     size past which prefill stops being amortized (the
+#                     planner's long-standing chunk clamp, now named)
+
+
 def elk_serve_config(cfg: ModelConfig, *, batch: int, cache_capacity: int,
                      kv_dtype: str = "bfloat16", num_chips: int = 256,
                      design: str = "ELK-Full", pipeline: bool = False,
-                     pod=None) -> ServeConfig:
+                     pod=None, role: str = "mixed") -> ServeConfig:
     """ServeConfig with the serving knobs chosen by the ELK scheduler.
 
     ``pod_plan`` reads the process-level plan cache (DESIGN.md §2), so this
@@ -179,6 +184,17 @@ def elk_serve_config(cfg: ModelConfig, *, batch: int, cache_capacity: int,
       pipeline plan ``microbatches == num_stages``, so this is the same
       budget as before the hybrid search existed).  Both are clamped to
       the cache capacity so one chunk never wraps a request's own ring.
+
+    ``role`` specializes the sizing for a disaggregated fleet pod
+    (DESIGN.md §12).  A ``prefill`` pod's whole job is admission, so its
+    chunk budget opens to the full saturating weight pass
+    (``PREFILL_SAT`` tokens) instead of the interference-limited budget a
+    mixed pod must respect.  A ``decode`` pod receives its work
+    pre-filled over the fleet tier and spends its budget on residency
+    instead: the chunk shrinks to the floor (it only prefills work shed
+    to it) while the plan's full oversubscription K stays, maximizing
+    slots x oversub.  ``mixed`` (the default) is byte-identical to the
+    pre-fleet behaviour.
     """
     from repro.core.integration import pod_plan
 
@@ -210,15 +226,26 @@ def elk_serve_config(cfg: ModelConfig, *, batch: int, cache_capacity: int,
         used = int(round(batch * oversub)) * ring
         prefix_bytes = int(max(0, _tier_bytes_left(cfg, pod) - used))
 
+    if role not in ("mixed", "prefill", "decode"):
+        raise ValueError(f"unknown pod role {role!r}; "
+                         "known: mixed, prefill, decode")
     knobs = pod_plan(cfg, batch=batch, seq=cache_capacity, phase="decode",
                      num_chips=num_chips, design=design,
                      mode="hybrid" if pipeline else "flat", chip=pod)
     depth = max(knobs.prefetch_depth, 1)
     if pipeline and knobs.microbatch > 0:
         per_interval = max(knobs.microbatch * max(knobs.microbatches, 1), 16)
-        chunk = min(per_interval, 128, cache_capacity)
+        chunk = min(per_interval, PREFILL_SAT, cache_capacity)
     else:
-        chunk = min(max(16, min(16 * depth, 128)), cache_capacity)
+        chunk = min(max(16, min(16 * depth, PREFILL_SAT)), cache_capacity)
+    if role == "prefill":
+        # nothing decodes here, so no interference budget to respect:
+        # admit the full saturating pass every tick
+        chunk = min(PREFILL_SAT, cache_capacity)
+    elif role == "decode":
+        # work arrives pre-filled over the fleet tier; keep only the
+        # minimal chunk (shed/local work) and the full residency budget
+        chunk = min(16, cache_capacity)
     return ServeConfig(batch=batch, cache_capacity=cache_capacity,
                        mode="elk_stream", prefetch_depth=depth,
                        kv_dtype=kv_dtype, prefill_chunk=chunk,
